@@ -1,0 +1,31 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+ART = Path(__file__).resolve().parent / "artifacts"
+ART.mkdir(parents=True, exist_ok=True)
+
+
+def timeit(fn, *, warmup=2, iters=10):
+    """Median seconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig. 5 — fraction of wall time spent packing, vs skinny width n.
+
+Conventional GEMM packs A (the big operand) on EVERY call; with tiny n the
+pack is not amortized.  We measure pack time and compute time separately on
+this machine (CPU wall-clock; the *shape* of the curve — pack share falling
+as n grows — is the paper's claim, hardware-independent).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs.tsmm_paper import BENCH_WORKLOAD
+from repro.kernels import ops
+
+
+def run(workload=BENCH_WORKLOAD):
+    import jax
+    rows = []
+    rng = np.random.default_rng(0)
+    m = k = workload.M
+    a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    # pack must be timed as the materialized copy a conventional library
+    # performs (jit would let XLA fuse it away — the very optimization the
+    # paper says conventional libraries CANNOT do across calls).
+    pack = jax.jit(lambda x: ops.pack_blocks(x, 256, 256))
+    t_pack = timeit(lambda: pack(a), iters=5)
+    for n in workload.n_sweep:
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        t_comp = timeit(lambda: jnp.dot(a, b), iters=5)
+        frac = t_pack / (t_pack + t_comp)
+        rows.append((f"packing_fraction_n{n}",
+                     round((t_pack + t_comp) * 1e6, 1),
+                     f"pack_share={frac:.3f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

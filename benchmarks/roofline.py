@@ -1,0 +1,149 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell:
+
+  compute term    t_c = FLOPs_global / (chips * peak)
+  memory term     t_m = HBM_bytes_global / (chips * hbm_bw)
+  collective term t_x = collective_bytes_per_device / link_bw
+                        (the per-device HLO already IS the per-chip
+                         program; brief formula collective/(chips*link_bw)
+                         with global = per_device * chips reduces to this)
+
+FLOPs/bytes come from the scan-aware jaxpr analyzer (global program);
+``compiled.cost_analysis()`` numbers are also recorded in the artifacts
+but under-count while-loop bodies (see repro/analysis/jaxpr_cost.py).
+
+MODEL_FLOPS convention: train = 6 * N_active * tokens;
+prefill = 2 * N_active * tokens; decode = 2 * N_active * batch.
+``mfu_bound`` = (MODEL_FLOPS/(chips*peak)) / max(t_c, t_m, t_x): the MFU
+an execution at this cell's roofline bound would achieve — the score the
+§Perf hillclimb pushes up.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.hw import TPU_V5E
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+OUT = Path(__file__).resolve().parent / "artifacts" / "roofline.csv"
+
+HW = TPU_V5E
+
+
+def model_flops(rec) -> float:
+    n_act = rec["n_active_params"]
+    kind = rec["kind"]
+    from repro.configs.base import SHAPES
+    sp = SHAPES[rec["shape"]]
+    if kind == "train":
+        return 6.0 * n_act * sp.global_batch * sp.seq_len
+    if kind == "prefill":
+        return 2.0 * n_act * sp.global_batch * sp.seq_len
+    return 2.0 * n_act * sp.global_batch          # decode: one token/stream
+
+
+def flash_score_bytes(rec) -> float:
+    """HBM bytes the jnp chunked attention spends on materialized
+    score/prob tensors that the fused Pallas flash kernel keeps in VMEM
+    (kernels/flash_attention.py).  Accounting mirrors jaxpr_cost's ledger:
+    score-dot output (4B) + prob operand re-read (4B) + the two reduction
+    passes (8B) = 16 B per score element, per layer, forward only —
+    applied to prefill cells (decode scores are tiny; train would need
+    bwd/remat factors and is reported unadjusted/conservative)."""
+    if rec["kind"] != "prefill":
+        return 0.0
+    from repro.configs.base import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    sp = SHAPES[rec["shape"]]
+    if not cfg.num_heads or cfg.family == "ssm":
+        return 0.0
+    s = sp.seq_len
+    layers = cfg.num_layers
+    if cfg.attn_every:               # hybrid: shared attn block only
+        layers = cfg.num_layers // cfg.attn_every
+    if cfg.sliding_window:
+        # SWA already bounds the window in the jnp path's masked tiles
+        return 0.0
+    return layers * sp.global_batch * cfg.num_heads * float(s) * s * 16.0
+
+
+def terms(rec) -> dict:
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    jc = rec.get("jaxpr_cost", {})
+    flops = jc.get("flops", 0.0)
+    hbm = jc.get("hbm_bytes", 0.0)
+    # weights+opt are re-read every step from HBM even when the jaxpr only
+    # names them once: include resident-state traffic (read once/step).
+    hbm_state = rec.get("in_bytes_per_device", 0.0) * chips
+    coll = rec.get("collectives", {})
+    coll_dev = sum(v.get("bytes_moved", 0.0) for v in coll.values()
+                   if isinstance(v, dict))
+    t_c = flops / (chips * HW.peak_flops_bf16)
+    t_m = max(hbm, hbm_state) / (chips * HW.hbm_bw)
+    t_x = coll_dev / HW.ici_bw_per_link
+    bound = max(t_c, t_m, t_x, 1e-30)
+    dom = {t_c: "compute", t_m: "memory", t_x: "collective"}[bound]
+    mf = model_flops(rec)
+    ideal = mf / (chips * HW.peak_flops_bf16)
+    t_m_flash = max(max(hbm - flash_score_bytes(rec), 0.0), hbm_state) / (
+        chips * HW.hbm_bw)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "chips": chips,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "t_memory_flash_s": t_m_flash,
+        "dominant": dom,
+        "model_flops": mf, "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "mfu_bound": ideal / bound,
+        "bytes_per_device": rec.get("in_bytes_per_device", 0.0),
+        "fits_hbm": rec.get("in_bytes_per_device", 0.0) < HW.hbm_bytes,
+        "tag": rec.get("tag", ""),
+    }
+
+
+def run(pattern: str = "*.json", emit_csv: bool = True):
+    rows = []
+    for f in sorted(ART.glob(pattern)):
+        rec = json.loads(f.read_text())
+        if "jaxpr_cost" not in rec or "error" in rec.get("jaxpr_cost", {}):
+            continue
+        rows.append(terms(rec))
+    if emit_csv and rows:
+        cols = list(rows[0].keys())
+        with open(OUT, "w") as fh:
+            fh.write(",".join(cols) + "\n")
+            for r in rows:
+                fh.write(",".join(_fmt(r[c]) for c in cols) + "\n")
+    return rows
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6e}"
+    return str(v)
+
+
+def markdown(rows) -> str:
+    head = ("| cell | chips | t_c (s) | t_m (s) | t_x (s) | dominant | "
+            "useful | MFU@bound | fits 16G |")
+    sep = "|" + "---|" * 9
+    lines = [head, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']}/{r['shape']}/{r['mesh']}{r['tag']} | {r['chips']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} "
+            f"| {'y' if r['fits_hbm'] else 'N'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown(rows))

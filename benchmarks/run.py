@@ -1,0 +1,58 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows per section.  The roofline
+section summarizes dry-run artifacts when present (run
+``python -m repro.launch.dryrun --all`` first for the full table).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (cache_complexity, inner_kernel_select,
+                            packing_fraction, prepack_vs_conventional)
+    sections = [
+        ("fig5_packing_fraction", packing_fraction.run),
+        ("fig6_7_prepack_vs_conventional", prepack_vs_conventional.run),
+        ("fig8_inner_kernel_selection", inner_kernel_select.run),
+        ("eq4_6_cache_complexity", cache_complexity.run),
+    ]
+    failed = 0
+    for name, fn in sections:
+        print(f"\n# === {name} ===")
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+
+    print("\n# === roofline (from dry-run artifacts) ===")
+    try:
+        from benchmarks import roofline
+        rows = roofline.run()
+        if rows:
+            print("name,us_per_call,derived")
+            for r in rows:
+                bound = max(r["t_compute_s"], r["t_memory_s"],
+                            r["t_collective_s"])
+                print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}{r['tag']},"
+                      f"{bound * 1e6:.1f},"
+                      f"dominant={r['dominant']}|mfu_bound={r['mfu_bound']:.3f}"
+                      f"|useful={r['useful_ratio']:.2f}")
+        else:
+            print("# no dry-run artifacts yet "
+                  "(python -m repro.launch.dryrun --all)")
+    except Exception:  # noqa: BLE001
+        failed += 1
+        traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end serving driver: load a model, PRE-PACK its weights for the
+serving batch size (the paper's install-time + pre-pack pipeline), and
+serve batched generation requests.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch qwen1_5_4b]
+        [--d-model 512 --layers 4] [--batch 8] [--steps 24]
+
+Default sizes are CPU-demo sized; on a TPU host drop --reduced sizing and
+pass a real arch id.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.models.registry import build_model, param_count
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_4b")
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch).reduced(
+        d_model=args.d_model, d_ff=2 * args.d_model, num_layers=args.layers,
+        vocab_size=4096, num_heads=8,
+        num_kv_heads=4, head_dim=args.d_model // 8)
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    print(f"model: {cfg.name} ({param_count(model)/1e6:.1f}M params)")
+
+    t0 = time.perf_counter()
+    eng = Engine(model, params, axes, batch_size=args.batch,
+                 max_len=args.prompt_len + args.steps + 8, prepack=True)
+    print(f"install-time: packed {len(eng.pack_report)} weight tensors "
+          f"in {time.perf_counter()-t0:.2f}s (paid once, reused per token)")
+
+    batch = {"tokens": (jnp.arange(args.batch * args.prompt_len)
+                        .reshape(args.batch, args.prompt_len) * 31
+                        % cfg.vocab_size).astype(jnp.int32)}
+    res = eng.generate(batch, steps=args.steps)
+    toks = args.batch * args.steps
+    print(f"prefill: {res.prefill_s*1e3:.1f} ms; decode: "
+          f"{res.per_token_s*1e3:.2f} ms/step "
+          f"({toks/(res.per_token_s*args.steps):.0f} tok/s batched)")
+    print("sample stream 0:", list(map(int, res.tokens[0]))[:12], "...")
+
+
+if __name__ == "__main__":
+    main()

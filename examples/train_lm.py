@@ -1,0 +1,59 @@
+"""End-to-end training driver with checkpoint/restart.
+
+CPU-demo default (a few M params, 40 steps, seconds):
+
+    PYTHONPATH=src python examples/train_lm.py
+
+The ~100M-param configuration from the deliverable spec (run it on real
+hardware; it is the same code path):
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+Kill it mid-run and re-run: it resumes from the latest atomic checkpoint.
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import ShapeSpec, get_reduced_config
+from repro.models.registry import build_model, param_count
+from repro.optim.adamw import OptConfig
+from repro.train.loop import LoopConfig, run
+
+
+PRESETS = {
+    # (d_model, layers, heads, kv, d_ff, vocab, batch, seq)
+    "demo": (256, 4, 4, 2, 512, 2048, 8, 128),
+    "100m": (768, 12, 12, 4, 2048, 32000, 32, 512),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    d, l, h, kv, ff, v, b, s = PRESETS[args.preset]
+    cfg = get_reduced_config("llama3_405b").reduced(
+        name=f"lm-{args.preset}", d_model=d, num_layers=l, num_heads=h,
+        num_kv_heads=kv, head_dim=d // h, d_ff=ff, vocab_size=v)
+    model = build_model(cfg)
+    print(f"training {param_count(model)/1e6:.1f}M-param LM "
+          f"for {args.steps} steps (batch {b} x seq {s})")
+
+    report = run(
+        model, ShapeSpec("train", s, b, "train"),
+        LoopConfig(total_steps=args.steps, ckpt_every=max(args.steps // 4, 1),
+                   ckpt_dir=args.ckpt_dir, log_every=5),
+        OptConfig(lr=3e-4, warmup_steps=args.steps // 10,
+                  decay_steps=args.steps))
+    print(f"steps={report.steps_run} resumed_from={report.resumed_from} "
+          f"loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f} "
+          f"({report.step_time_ewma:.2f}s/step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro: AutoTSMM on TPU — auto-tuned tall-and-skinny matmul runtime
+inside a multi-pod JAX training/serving framework.
+
+Public API:
+    repro.core.tsmm.tsmm_dot        planned TSMM (the paper's runtime stage)
+    repro.core.autotuner.make_plan  runtime plan generation
+    repro.core.packing.pack         pre-pack module
+    repro.configs.get_config        the 10 assigned architectures
+    repro.models.registry.build_model
+    repro.serve.engine.Engine       pre-packed batched serving
+    repro.train.loop.run            fault-tolerant training
+"""
+
+__version__ = "1.0.0"

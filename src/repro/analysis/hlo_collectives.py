@@ -1,0 +1,137 @@
+"""Trip-count-aware collective accounting from post-SPMD HLO text.
+
+``compiled.as_text()`` lists each op once, but collectives inside a
+``while`` body (layer scans, microbatch scans) execute trip-count times.
+This parser:
+
+  1. splits the module into computation blocks;
+  2. finds every ``while`` op, resolves its body/condition computations,
+     and extracts the trip count from the condition's integer constant
+     (jax ``lax.scan`` lowers to a 0..N counter compare);
+  3. recursively multiplies collective bytes through nested while loops.
+
+Byte multipliers are ring-algorithm costs (n = group size):
+  all-reduce 2(n-1)/n, all-gather/all-to-all (n-1)/n,
+  reduce-scatter (n-1)x output, collective-permute 1x.
+All numbers are per-device (the module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "pred": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?((?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?(?:,\s*)?)+)(?:\))?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALL_RE = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{)%?([\w.\-]+)")
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = _COMP_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _op_bytes(line: str) -> tuple[str, float, int] | None:
+    m = _COLL_RE.search(line)
+    if not m:
+        return None
+    size = 0
+    for dt, dims in _SHAPE_RE.findall(m.group(1)):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n_el = 1
+        for d in dims.split(","):
+            if d:
+                n_el *= int(d)
+        size += n_el * _DTYPE_BYTES[dt]
+    g = _GROUPS_RE.search(line)
+    if g:
+        n = len(g.group(1).split(","))
+    else:
+        gi = _GROUPS_IOTA_RE.search(line)
+        n = int(gi.group(2)) if gi else 1
+    return m.group(2), float(size), n
+
+
+def _factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    return {"all-reduce": 2 * (n - 1) / n,
+            "all-gather": (n - 1) / n,
+            "all-to-all": (n - 1) / n,
+            "reduce-scatter": float(n - 1),
+            "collective-permute": 1.0}[op]
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    consts = []
+    for line in comps.get(cond_name, []):
+        consts += [int(x) for x in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(text: str) -> dict:
+    """{op: {count, bytes_moved, tensor_bytes}} with while-trip weighting."""
+    comps = _split_computations(text)
+    entry_names = re.findall(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    entry = entry_names[0] if entry_names else next(iter(comps), None)
+
+    out: dict = {}
+    visited: set = set()
+
+    def walk(name: str, mult: float):
+        if name not in comps:
+            return
+        key = (name, mult)
+        # guard against pathological recursion, allow same comp at diff mult
+        if key in visited or len(visited) > 100_000:
+            return
+        visited.add(key)
+        for line in comps[name]:
+            ob = _op_bytes(line)
+            if ob:
+                op, size, n = ob
+                rec = out.setdefault(op, {"count": 0, "bytes_moved": 0.0,
+                                          "tensor_bytes": 0.0})
+                rec["count"] += 1
+                rec["bytes_moved"] += size * _factor(op, n) * mult
+                rec["tensor_bytes"] += size * mult
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps, cond)
+                walk(body, mult * trips)
+                continue
+            for callee in _CALL_RE.findall(line):
+                if callee in comps and callee != name:
+                    walk(callee, mult)
+
+    if entry:
+        walk(entry, 1.0)
+    return out

@@ -1,0 +1,181 @@
+"""Scan-aware jaxpr cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while``/``scan`` body ONCE,
+so a 126-layer layer-scanned model under-reports FLOPs by ~126x.  This
+module walks the jaxpr instead, multiplying through scan trip counts, and
+produces:
+
+  * ``flops``            — exact 2mnk for every dot_general (+ elementwise
+                           and transcendental counts), scan-multiplied;
+  * ``hbm_bytes``        — a fusion-aware HBM traffic model: dot operands/
+                           outputs, gathers/scatters/dynamic-update-slices,
+                           sorts and reduction inputs are counted; pure
+                           elementwise ops are assumed fused into their
+                           producers (the TPU/XLA norm).  This is the
+                           roofline MEMORY numerator (documented model, see
+                           DESIGN.md §6);
+  * per-primitive breakdowns for the §Perf iteration log.
+
+Numbers are GLOBAL (whole program, all devices); divide by chip count for
+per-device terms (sharding divides work evenly across our meshes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.extend import core as jex_core
+
+TRANSCENDENTAL = {"exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                  "sin", "cos", "pow", "cbrt", "log1p", "expm1"}
+ELEMENTWISE = {"add", "sub", "mul", "div", "max", "min", "neg", "abs",
+               "select_n", "ge", "gt", "le", "lt", "eq", "ne", "and", "or",
+               "not", "xor", "sign", "floor", "ceil", "round", "clamp",
+               "integer_pow", "square"}
+MEMORY_OPS = {"gather", "scatter", "scatter-add", "scatter_add", "take",
+              "dynamic_slice", "dynamic_update_slice", "sort", "argsort",
+              "cumsum", "cumlogsumexp", "top_k", "iota", "concatenate",
+              "transpose", "rev", "reshape_p"}
+REDUCE_OPS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+              "reduce_and", "reduce_or", "argmax", "argmin",
+              "reduce_precision"}
+
+
+def _nbytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001
+        return 0.0
+
+
+def _size(aval) -> float:
+    try:
+        return float(np.prod(aval.shape))
+    except Exception:  # noqa: BLE001
+        return 0.0
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    elementwise: float = 0.0
+    hbm_bytes: float = 0.0
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    gather_bytes: float = 0.0
+    by_prim: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.elementwise += other.elementwise * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.dot_flops += other.dot_flops * mult
+        self.dot_bytes += other.dot_bytes * mult
+        self.gather_bytes += other.gather_bytes * mult
+        for k, v in other.by_prim.items():
+            self.by_prim[k] = self.by_prim.get(k, 0.0) + v * mult
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["by_prim"] = dict(sorted(self.by_prim.items(),
+                                   key=lambda kv: -kv[1])[:20])
+        return d
+
+
+def _dot_flops(eqn) -> tuple[float, float]:
+    (lhs, rhs), out = eqn.invars, eqn.outvars[0]
+    d = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = d
+    lshape = lhs.aval.shape
+    batch = float(np.prod([lshape[i] for i in lb])) if lb else 1.0
+    contract = float(np.prod([lshape[i] for i in lc])) if lc else 1.0
+    m = float(np.prod([s for i, s in enumerate(lshape)
+                       if i not in set(lc) | set(lb)]))
+    rshape = rhs.aval.shape
+    n = float(np.prod([s for i, s in enumerate(rshape)
+                       if i not in set(rc) | set(rb)]))
+    flops = 2.0 * batch * m * n * contract
+    byts = _nbytes(lhs.aval) + _nbytes(rhs.aval) + _nbytes(out.aval)
+    return flops, byts
+
+
+def _sub_jaxprs(eqn):
+    """(closed_jaxpr, multiplier) pairs inside an eqn."""
+    name = eqn.primitive.name
+    p = eqn.params
+    if name == "scan":
+        yield p["jaxpr"], float(p.get("length", 1))
+    elif name == "while":
+        yield p["body_jaxpr"], 1.0          # trip count unknown; flagged
+        yield p["cond_jaxpr"], 1.0
+    elif name == "cond":
+        brs = p.get("branches", ())
+        if brs:
+            yield brs[0], 1.0               # one branch executes
+    elif "jaxpr" in p:
+        yield p["jaxpr"], 1.0
+    elif "call_jaxpr" in p:
+        yield p["call_jaxpr"], 1.0
+    elif "branches" in p:
+        yield p["branches"][0], 1.0
+
+
+def analyze_jaxpr(jaxpr) -> Cost:
+    cost = Cost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        subs = list(_sub_jaxprs(eqn))
+        if subs:
+            for sub, mult in subs:
+                raw = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+                cost.add(analyze_jaxpr(raw), mult)
+            continue
+        out_aval = eqn.outvars[0].aval if eqn.outvars else None
+        if name == "dot_general":
+            f, b = _dot_flops(eqn)
+            cost.flops += f
+            cost.dot_flops += f
+            cost.hbm_bytes += b
+            cost.dot_bytes += b
+            cost.by_prim["dot_general"] = cost.by_prim.get("dot_general", 0.0) + f
+        elif name in TRANSCENDENTAL:
+            n = _size(out_aval)
+            cost.transcendentals += n
+            cost.flops += n  # 1 flop-equivalent each (roofline convention)
+        elif name in ELEMENTWISE:
+            n = _size(out_aval)
+            cost.elementwise += n
+            cost.flops += n
+        elif name in MEMORY_OPS or name.startswith("gather") or \
+                name.startswith("scatter") or name.startswith("dynamic"):
+            b = sum(_nbytes(v.aval) for v in eqn.invars if hasattr(v, "aval"))
+            b += sum(_nbytes(v.aval) for v in eqn.outvars)
+            if name in ("dynamic_update_slice", "dynamic_slice"):
+                # only the updated/extracted window moves, not the operand
+                b = 2 * min(_nbytes(v.aval) for v in
+                            (list(eqn.invars[1:2]) + list(eqn.outvars))
+                            if hasattr(v, "aval"))
+            cost.hbm_bytes += b
+            cost.gather_bytes += b
+            cost.by_prim[name] = cost.by_prim.get(name, 0.0) + b
+        elif name.startswith("reduce") or name in REDUCE_OPS:
+            b = sum(_nbytes(v.aval) for v in eqn.invars if hasattr(v, "aval"))
+            cost.hbm_bytes += b
+            cost.flops += sum(_size(v.aval) for v in eqn.invars
+                              if hasattr(v, "aval"))
+            cost.by_prim[name] = cost.by_prim.get(name, 0.0) + b
+        elif name in ("custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr"):
+            pass  # handled via sub-jaxpr branch above when params carry it
+    return cost
+
+
+def analyze_fn(fn, *args, **kwargs) -> Cost:
+    """Trace fn with ShapeDtypeStruct args and analyze its jaxpr."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return analyze_jaxpr(jaxpr.jaxpr)

@@ -1,0 +1,152 @@
+"""Sharded numpy checkpoints with atomic commit, async save, auto-resume.
+
+Layout (multi-host aware; each process writes only its addressable shards):
+
+    <dir>/step_000000123.tmp.<nonce>/    # staged
+        proc_000.npz                     # {flat_idx -> local shard array}
+        meta.json                        # step, treedef repr, shapes, dtypes
+    <dir>/step_000000123/                # atomically renamed when complete
+    <dir>/LATEST                         # text file: "step_000000123"
+
+Restore rebuilds global arrays with ``jax.make_array_from_callback``
+against the *target* shardings — a checkpoint written on one mesh restores
+onto another (elastic restart), as long as shard boundaries divide.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.packing import PackedTensor
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, block: bool = False):
+        """Snapshot to host memory synchronously, write to disk async."""
+        self.wait()  # one in-flight save at a time
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        dtypes = [str(x.dtype) for x in host]
+        # npz can't hold ml_dtypes (bfloat16 etc) — store as a u8 view and
+        # re-view on restore via the recorded dtype string.
+        host = [x.view(np.uint8) if x.dtype.kind == "V" else x for x in host]
+        meta = {
+            "step": int(step),
+            "n_leaves": len(leaves),
+            "shapes": [list(x.shape) for x in host],
+            "dtypes": dtypes,
+        }
+
+        def _write():
+            name = f"step_{step:012d}"
+            tmp = self.dir / f"{name}.tmp.{os.getpid()}.{time.time_ns()}"
+            tmp.mkdir(parents=True)
+            np.savez(tmp / f"proc_{jax.process_index():03d}.npz",
+                     **{str(i): a for i, a in enumerate(host)})
+            with open(tmp / "meta.json", "w") as f:
+                json.dump(meta, f)
+            final = self.dir / name
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)               # atomic commit
+            with open(self.dir / "LATEST.tmp", "w") as f:
+                f.write(name)
+            os.replace(self.dir / "LATEST.tmp", self.dir / "LATEST")
+            self._gc()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:012d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp") and "tmp" not in p.name:
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except (IndexError, ValueError):
+                    pass
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        latest = self.dir / "LATEST"
+        if latest.exists():
+            name = latest.read_text().strip()
+            if (self.dir / name).exists():
+                return int(name.split("_")[1])
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Rebuild the pytree; ``target_tree`` provides structure (values may
+        be arrays or ShapeDtypeStructs), ``shardings`` an optional matching
+        tree of NamedShardings for distributed placement."""
+        self.wait()
+        d = self.dir / f"step_{step:012d}"
+        with open(d / "meta.json") as f:
+            meta = json.load(f)
+        files = sorted(d.glob("proc_*.npz"))
+        data: dict[int, np.ndarray] = {}
+        for f in files:
+            with np.load(f) as z:
+                for k in z.files:
+                    data[int(k)] = z[k]
+        leaves, treedef = _flatten(target_tree)
+        assert len(leaves) == meta["n_leaves"], (len(leaves), meta["n_leaves"])
+        shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                        else [None] * len(leaves))
+        import ml_dtypes
+        out = []
+        for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+            arr = data[i]
+            want_dt = meta["dtypes"][i]
+            if arr.dtype == np.uint8 and want_dt not in ("uint8",):
+                arr = arr.view(getattr(ml_dtypes, want_dt, want_dt))
+            assert list(arr.shape) == list(ref.shape), (i, arr.shape, ref.shape)
+            if sh is None:
+                out.append(jax.numpy.asarray(arr))
+            else:
+                out.append(jax.make_array_from_callback(
+                    arr.shape, sh, lambda idx, a=arr: a[idx]))
+        return jax.tree.unflatten(treedef, out)
+
+    def restore_latest(self, target_tree, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, target_tree, shardings)

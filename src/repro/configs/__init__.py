@@ -1,0 +1,16 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    all_cells,
+    all_configs,
+    applicable_shapes,
+    get_config,
+    get_reduced_config,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "ModelConfig", "ShapeSpec", "all_cells",
+    "all_configs", "applicable_shapes", "get_config", "get_reduced_config",
+]

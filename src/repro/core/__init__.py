@@ -1,0 +1,20 @@
+"""The paper's contribution: the AutoTSMM auto-tuning pipeline.
+
+install-time stage: autotuner.candidate_blocks -> vmem_model (Eq.2/3
+analogue) -> evaluator (measure) -> registry (persist); run via
+``python -m repro.core.install``.
+runtime stage: autotuner.make_plan / plan_for_matmul -> Plan ->
+tsmm.tsmm_dot replays it (pre-packed Pallas kernels on TPU).
+"""
+
+from repro.core.autotuner import make_plan, plan_for_matmul
+from repro.core.packing import PackedTensor, pack
+from repro.core.plan import Plan, Problem, is_tsmm
+from repro.core.tsmm import (conventional_ksplit, distributed_tsmm,
+                             overlapped_ring_tsmm, prepack_for, tsmm_dot)
+
+__all__ = [
+    "make_plan", "plan_for_matmul", "PackedTensor", "pack", "Plan",
+    "Problem", "is_tsmm", "tsmm_dot", "prepack_for", "distributed_tsmm",
+    "conventional_ksplit", "overlapped_ring_tsmm",
+]

@@ -1,0 +1,114 @@
+"""The auto-tuner: install-time kernel selection + runtime plan generation.
+
+Mirrors the paper's two stages:
+
+* **install-time** — enumerate candidate inner-kernel block shapes, filter
+  by the VMEM predictive model (Eq.2/3 analogue), rank.  On real TPU the
+  performance evaluator then measures the short-list; in this container the
+  evaluator runs in ``model`` mode (analytic) or ``wallclock`` mode against
+  the blocked-XLA implementation (exercised in tests).
+* **runtime** — given a concrete Problem, produce/lookup the execution
+  Plan.  Two search patterns, straight from the paper §IV-A-1:
+  pattern A searches downward from the VMEM bound in inner-kernel-sized
+  steps; pattern B takes the largest power of two under the bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Optional
+
+from repro.core import registry
+from repro.core.hw import TPU_V5E, HwSpec
+from repro.core.plan import SKINNY_MAX, Plan, Problem, is_tsmm
+from repro.core.vmem_model import feasible, predict
+
+log = logging.getLogger(__name__)
+
+
+def _pow2_below(x: int) -> int:
+    p = 1
+    while p * 2 <= x:
+        p *= 2
+    return p
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def candidate_blocks(problem: Problem, hw: HwSpec = TPU_V5E) -> list[Plan]:
+    """Enumerate feasible candidate plans for one problem."""
+    orientation = "tall_a" if problem.skinny_dim == "n" else "skinny_a"
+    sl = hw.sublane.get(problem.dtype, 8)
+    cands: list[Plan] = []
+
+    if orientation == "tall_a":
+        n_pad = _ceil_to(problem.n, 128)
+        # pattern B: powers of two; pattern A: near-bound multiples of the
+        # MXU edge (the paper's [bound - 8x, bound] walk).
+        bms = {256, 512, 1024, 2048, 4096, _pow2_below(max(problem.m, sl))}
+        bks = {128, 256, 512, 1024, 2048, _pow2_below(max(problem.k, 128))}
+        for bm in sorted(bms):
+            for bk in sorted(bks):
+                if bm > max(problem.m, sl) or bk > max(problem.k, 128):
+                    continue
+                cands.append(Plan(problem, "tall_a", bm=bm, bk=bk, bn=n_pad))
+    else:
+        bns = {128, 256, 512, 1024, 2048}
+        bks = {128, 256, 512, 1024, 2048, _pow2_below(max(problem.k, 128))}
+        for bn in sorted(bns):
+            for bk in sorted(bks):
+                if bn > _ceil_to(problem.n, 128) or bk > max(problem.k, 128):
+                    continue
+                cands.append(Plan(problem, "skinny_a", bm=problem.m, bk=bk, bn=bn))
+
+    out = [predict(c, hw) for c in cands if feasible(c, hw)]
+    out.sort(key=lambda p: p.score)
+    return out
+
+
+def make_plan(
+    problem: Problem,
+    hw: HwSpec = TPU_V5E,
+    *,
+    measure: Optional[str] = None,   # None -> model only; "wallclock" -> evaluate
+    top_k: int = 3,
+    persist: bool = True,
+    impl: str = "auto",
+) -> Plan:
+    """Runtime-stage entry: cached plan or fresh tune."""
+    cached = registry.get(problem.key())
+    if cached is not None:
+        return cached
+
+    cands = candidate_blocks(problem, hw)
+    if not cands:
+        # degenerate shapes: fall back to a single-block plan
+        plan = predict(
+            Plan(problem, "tall_a" if problem.skinny_dim == "n" else "skinny_a",
+                 bm=max(problem.m, 8), bk=128, bn=_ceil_to(max(problem.n, 1), 128),
+                 impl="xla", prepack=False),
+            hw,
+        )
+        registry.put(plan, persist=persist)
+        return plan
+
+    best = cands[0]
+    if measure == "wallclock":
+        from repro.core.evaluator import measure_plans  # lazy: avoids cycle
+        best = measure_plans(cands[:top_k])
+    best = dataclasses.replace(best, impl=impl,
+                               chosen_by="measured" if measure else "model")
+    registry.put(best, persist=persist)
+    log.info("autotuned %s", best)
+    return best
+
+
+def plan_for_matmul(m: int, k: int, n: int, dtype: str = "bfloat16",
+                    num_shards: int = 1, **kw) -> Optional[Plan]:
+    """None if the shape is not tall-and-skinny (caller uses plain GEMM)."""
+    if not is_tsmm(m, k, n):
+        return None
+    return make_plan(Problem(m, k, n, dtype, num_shards), **kw)

@@ -1,0 +1,62 @@
+"""Hardware model for the target platform (TPU v5e-class chip).
+
+The container is CPU-only; these constants drive (a) the autotuner's
+predictive model (the paper's Eq.2/Eq.3 cache bounds become VMEM bounds),
+and (b) the roofline terms in benchmarks/roofline.py.  All figures are the
+ones fixed by the assignment brief: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+MiB = 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float        # per chip
+    hbm_bw: float                 # bytes/s per chip
+    ici_bw_per_link: float        # bytes/s per link
+    ici_links: int                # links per chip (2D torus)
+    hbm_bytes: int                # capacity per chip
+    vmem_bytes: int               # software-managed on-chip buffer
+    mxu_dim: int = 128            # systolic array edge
+    sublane: dict = dataclasses.field(
+        default_factory=lambda: {"float32": 8, "bfloat16": 16, "float64": 4}
+    )
+
+    @property
+    def peak_flops_f32(self) -> float:
+        return self.peak_flops_bf16 / 4  # MXU f32 via passes
+
+    def peak_flops(self, dtype: str) -> float:
+        return self.peak_flops_bf16 if dtype == "bfloat16" else self.peak_flops_f32
+
+    @property
+    def ridge_flops_per_byte(self) -> float:
+        return self.peak_flops_bf16 / self.hbm_bw
+
+
+TPU_V5E = HwSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    ici_links=4,
+    hbm_bytes=16 * 1024 * MiB,
+    # Conservative, configurable working-set budget for Pallas pipelines.
+    vmem_bytes=64 * MiB,
+)
+
+# Fraction of VMEM the autotuner may plan into (double buffering etc. is
+# accounted explicitly; this margin covers compiler scratch + semaphores).
+VMEM_USABLE_FRACTION = 0.75
+
+DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "float64": 8, "int8": 1}
+
+
+def dtype_bytes(dtype) -> int:
+    return DTYPE_BYTES[str(dtype)]

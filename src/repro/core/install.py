@@ -1,0 +1,74 @@
+"""Install-time stage CLI — the paper's 'assembly kernel selector' run
+once per machine/platform.
+
+    PYTHONPATH=src python -m repro.core.install [--measure] [--archs a,b]
+
+Pre-populates the persistent plan registry with execution plans for every
+TSMM-shaped matmul the model zoo's serving path will hit (decode batch
+sizes x each arch's projection shapes), so the runtime stage is a pure
+lookup.  With ``--measure`` the performance evaluator times the
+short-list (wall-clock; on TPU this times the Pallas kernels).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.autotuner import make_plan
+from repro.core.plan import Problem, is_tsmm
+from repro.core.registry import cache_path
+
+DECODE_BATCHES = (1, 8, 32, 128)
+
+
+def serving_problems(cfg) -> list[Problem]:
+    """The (m, k, n) set the decode path hits for one architecture."""
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    shapes = set()
+    if h:
+        shapes |= {(d, h * hd), (d, kh * hd), (h * hd, d)}
+    if cfg.d_ff:
+        shapes |= {(d, cfg.d_ff), (cfg.d_ff, d)}
+    if cfg.num_experts:
+        shapes |= {(d, cfg.d_ff_expert), (cfg.d_ff_expert, d)}
+    if cfg.ssm_state:
+        di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+        shapes |= {(d, 2 * di + 2 * g * n + cfg.ssm_heads), (di, d)}
+    if cfg.use_mla:
+        shapes |= {(d, cfg.q_lora_rank), (cfg.kv_lora_rank,
+                                          h * (cfg.head_dim + cfg.v_head_dim))}
+    shapes.add((d, cfg.vocab_size))
+    out = []
+    for b in DECODE_BATCHES:
+        for (k, n) in shapes:
+            if is_tsmm(b, k, n):
+                out.append(Problem(b, k, n, cfg.dtype))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measure", action="store_true",
+                    help="wall-clock the short-list (evaluator stage)")
+    ap.add_argument("--archs", default="")
+    args = ap.parse_args()
+    archs = ([a.strip() for a in args.archs.split(",") if a.strip()]
+             or ARCH_IDS)
+
+    t0 = time.time()
+    n_plans = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        probs = serving_problems(cfg)
+        for p in probs:
+            make_plan(p, measure="wallclock" if args.measure else None)
+            n_plans += 1
+        print(f"{arch:24s} {len(probs):3d} plans")
+    print(f"\ninstalled {n_plans} execution plans in {time.time()-t0:.1f}s "
+          f"-> {cache_path()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Model-facing linear op.
+
+Every dense layer in the model zoo goes through :func:`linear`, which is
+where the paper's technique integrates with the framework: when the weight
+arrives pre-packed (serving path — packed once at load by
+``serve.engine.load_for_serving``), the call routes to the fused
+skinny-A Pallas kernel; otherwise it is a plain XLA GEMM (training path,
+regular shapes).  Model code stays oblivious.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.packing import is_packed
+from repro.core.tsmm import tsmm_dot
+from repro.kernels.ref import act_ref
+
+
+def linear(x, w, b=None, act: Optional[str] = None):
+    """act(x @ w + b).  ``w``: (k, n) array or PackedTensor."""
+    if is_packed(w):
+        return tsmm_dot(x, w, bias=b, act=act)
+    out = jnp.dot(x, w)
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    if act is not None:
+        out = act_ref(out.astype(jnp.float32), act).astype(x.dtype)
+    return out

@@ -1,0 +1,96 @@
+"""Execution plans — the artifact the paper's runtime stage produces.
+
+A :class:`Plan` fixes everything about one TSMM problem instance:
+the orientation (which operand is skinny), the block shapes (the paper's
+m_c/k_c/n_c + the inner-kernel m_r x n_r collapsed into one MXU-aligned
+Pallas block), the distribution strategy (shard the tall dim, never the
+skinny one), and the implementation backend.  Plans are produced by the
+autotuner, persisted by the registry, and replayed by ``tsmm_dot``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """One TSMM instance: C(m,n) = A(m,k) @ B(k,n)."""
+    m: int
+    k: int
+    n: int
+    dtype: str = "bfloat16"
+    # devices the tall dim may be sharded over (the runtime 'thread count')
+    num_shards: int = 1
+
+    @property
+    def skinny_dim(self) -> str:
+        return "n" if self.n <= self.m else "m"
+
+    @property
+    def skinny(self) -> int:
+        return min(self.m, self.n)
+
+    @property
+    def tall(self) -> int:
+        return max(self.m, self.n)
+
+    def key(self) -> str:
+        return f"m{self.m}_k{self.k}_n{self.n}_{self.dtype}_s{self.num_shards}"
+
+
+# A problem is "tall-and-skinny" when one output dim is at most this and the
+# other is at least GEMM_MIN_TALL x larger — below the MXU ridge point the
+# matmul is HBM-bound and the TSMM machinery pays off (DESIGN.md §2).
+SKINNY_MAX = 256
+TALL_RATIO = 8
+
+
+def is_tsmm(m: int, k: int, n: int) -> bool:
+    lo, hi = min(m, n), max(m, n)
+    return lo <= SKINNY_MAX and hi >= TALL_RATIO * lo and k >= 512
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    problem: Problem
+    orientation: str          # "tall_a" (A tall, B skinny) | "skinny_a" (decode)
+    bm: int                   # block of the tall/output-row dim
+    bk: int                   # k block
+    bn: int                   # block of the wide output dim (skinny_a) or
+                              # padded skinny width (tall_a)
+    impl: str = "auto"        # pallas | pallas_interpret | xla | auto
+    prepack: bool = True      # pre-pack the tall operand
+    shard_tall: bool = True   # distribute the tall dim over num_shards
+    # predicted roofline terms (seconds) from the cost model
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    # provenance
+    chosen_by: str = "model"  # "model" | "measured"
+    score: float = 0.0
+
+    @property
+    def grid(self) -> tuple:
+        p = self.problem
+        if self.orientation == "tall_a":
+            return (-(-p.m // self.bm), -(-p.k // self.bk))
+        return (-(-p.n // self.bn), -(-p.k // self.bk))
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "Plan":
+        d = dict(d)
+        d["problem"] = Problem(**d["problem"])
+        return Plan(**d)
+
+    def __str__(self) -> str:
+        p = self.problem
+        return (f"Plan[{p.key()} {self.orientation} blocks=({self.bm},{self.bk},"
+                f"{self.bn}) grid={self.grid} impl={self.impl} "
+                f"prepack={self.prepack} t_c={self.t_compute:.2e}s "
+                f"t_m={self.t_memory:.2e}s by={self.chosen_by}]")

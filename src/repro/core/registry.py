@@ -1,0 +1,92 @@
+"""Persistent plan registry — the install-time artifact.
+
+The paper persists its execution plans so that repeated runs skip tuning
+("the execution plan will be repeatedly executed and the overhead of
+AutoTSMM will be negligible").  We keep a JSON file keyed by
+``platform/problem.key()`` with atomic writes so concurrent launchers on a
+pod slice can share one cache over NFS.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Optional
+
+import jax
+
+from repro.core.plan import Plan
+
+_LOCK = threading.Lock()
+_MEM: dict[str, Plan] = {}
+_LOADED_FROM: Optional[Path] = None
+
+
+def cache_path() -> Path:
+    p = os.environ.get("REPRO_PLAN_CACHE")
+    if p:
+        return Path(p)
+    return Path(os.environ.get("HOME", "/tmp")) / ".cache" / "repro" / "plans.json"
+
+
+def _platform() -> str:
+    return jax.default_backend()
+
+
+def _key(problem_key: str) -> str:
+    return f"{_platform()}/{problem_key}"
+
+
+def _load_file() -> dict:
+    global _LOADED_FROM
+    path = cache_path()
+    if path.exists():
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+            for k, v in raw.items():
+                if k not in _MEM:
+                    _MEM[k] = Plan.from_json(v)
+        except (json.JSONDecodeError, TypeError, KeyError):
+            pass  # corrupt cache: treat as empty, will be overwritten
+    _LOADED_FROM = path
+    return _MEM
+
+
+def get(problem_key: str) -> Optional[Plan]:
+    with _LOCK:
+        if _LOADED_FROM is None:
+            _load_file()
+        return _MEM.get(_key(problem_key))
+
+
+def put(plan: Plan, persist: bool = True) -> None:
+    with _LOCK:
+        if _LOADED_FROM is None:
+            _load_file()
+        _MEM[_key(plan.problem.key())] = plan
+        if not persist:
+            return
+        path = cache_path()
+        path.parent.mkdir(parents=True, exist_ok=True)
+        blob = {k: p.to_json() for k, p in _MEM.items()}
+        fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1)
+            os.replace(tmp, path)  # atomic on POSIX
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+
+def clear_memory() -> None:
+    """Testing hook: drop the in-memory cache (file untouched)."""
+    global _LOADED_FROM
+    with _LOCK:
+        _MEM.clear()
+        _LOADED_FROM = None

@@ -1,0 +1,212 @@
+"""Public TSMM API: planned matmul + distributed variants.
+
+``tsmm_dot`` is the single entry point applications use; it consults the
+plan registry (runtime stage) and dispatches to the pre-packed Pallas path
+for tall-and-skinny shapes, falling back to plain XLA GEMM otherwise —
+mirroring how MKL dispatches TSMM vs GEMM.
+
+The distributed forms encode the paper's multi-thread optimizer at mesh
+scale:
+
+* :func:`distributed_tsmm` shards the TALL dim over the mesh axis and
+  replicates the skinny operand — each device computes its full output
+  rows with NO collectives (the GEBB_t "no synchronization" property).
+* :func:`conventional_ksplit` is the conventional-library baseline: split
+  the contraction dim, all-reduce partials.  Implemented so the benchmark
+  suite can reproduce the paper's conventional-GEMM comparison.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core import registry
+from repro.core.autotuner import make_plan, plan_for_matmul
+from repro.core.packing import PackedTensor, is_packed, pack
+from repro.core.plan import Plan, Problem, is_tsmm
+from repro.kernels import ops
+
+
+def impl_choice() -> str:
+    return os.environ.get("REPRO_TSMM_IMPL", "auto")
+
+
+def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
+             plan: Optional[Plan] = None, impl: Optional[str] = None):
+    """C = act(A @ B + bias) with TSMM planning.
+
+    ``a``: (..., k) activations; ``b``: (k, n) array or PackedTensor.
+    Shapes are static under jit, so planning happens at trace time — the
+    'runtime stage' of the paper runs once per compiled program.
+    """
+    impl = impl or impl_choice()
+    lead, k = a.shape[:-1], a.shape[-1]
+    m = 1
+    for d in lead:
+        m *= d
+    a2 = a.reshape(m, k)
+
+    if is_packed(b):
+        nk, _, bk, _ = b.blocks.shape[-4:]
+        if k == nk * bk:
+            # 2D-TP serving: k-shard the skinny activation panel to match
+            # the weight's row-block sharding -> partial sums + psum of the
+            # (tiny) output instead of gathering the (huge) packed weight.
+            from repro.sharding.context import shard_act
+            a2 = shard_act(a2.reshape(m, nk, bk), "batch", "kblocks", None
+                           ).reshape(m, k)
+        out = ops.tsmm_skinny(a2, b.blocks, bias, act=act, impl=impl)
+        out = out[:, : b.orig_cols]
+        return out.reshape(*lead, b.orig_cols)
+
+    n = b.shape[-1]
+    if plan is None and is_tsmm(m, k, n):
+        plan = plan_for_matmul(m, k, n, str(a.dtype))
+    if plan is not None and plan.orientation == "skinny_a":
+        bp = pack(b, plan.bk, plan.bn)
+        out = ops.tsmm_skinny(a2, bp.blocks, bias, act=act, impl=impl)
+        return out[:, :n].reshape(*lead, n)
+    if plan is not None and plan.orientation == "tall_a":
+        if plan.prepack:
+            ap = pack(a2, plan.bm, plan.bk)
+            out = ops.tsmm_packed(ap.blocks, b, impl=impl)[:m]
+        else:
+            out = ops.tsmm(a2, b, bm=plan.bm, bk=plan.bk, impl=impl)
+    else:
+        out = jnp.dot(a2, b)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    if act is not None:
+        from repro.kernels.ref import act_ref
+        out = act_ref(out.astype(jnp.float32), act).astype(out.dtype)
+    return out.reshape(*lead, n)
+
+
+def prepack_for(m_skinny: int, w, *, num_shards: int = 1,
+                shard_divisors: tuple = (1, 1)) -> Optional[PackedTensor]:
+    """Plan + pack a weight for decode-time reuse.
+
+    ``shard_divisors`` = (row_shards, col_shards) the weight is distributed
+    over; chosen blocks must divide the per-shard dims so packing commutes
+    with sharding (pack happens locally on each device's shard).
+    Returns None when no conforming block exists (caller keeps the plain
+    weight; honest fallback, recorded by the caller).
+    """
+    k, n = int(w.shape[-2]), int(w.shape[-1])
+    rs, cs = shard_divisors
+    if k % rs or n % cs:
+        return None
+    ks, ns = k // rs, n // cs
+    plan = make_plan(Problem(m_skinny, ks, ns, str(w.dtype), num_shards))
+    bk = _largest_conforming(ks, plan.bk)
+    bn = _largest_conforming(ns, plan.bn)
+    if bk is None or bn is None:
+        return None
+    return pack(w, bk, bn)
+
+
+def _largest_conforming(dim: int, cap: int) -> Optional[int]:
+    """Largest multiple of 128 that divides ``dim`` and is <= cap."""
+    best = None
+    d = 128
+    while d <= min(dim, max(cap, 128)):
+        if dim % d == 0:
+            best = d
+        d += 128
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Distributed TSMM (shard_map) — the mesh-scale multi-thread optimizer
+# ---------------------------------------------------------------------------
+
+
+def distributed_tsmm(a, b, mesh: Mesh, axis: str = "data", *,
+                     plan: Optional[Plan] = None, impl: Optional[str] = None):
+    """Tall-A TSMM with the tall dim sharded over ``axis``; B replicated.
+
+    Zero collectives in the compute path — the paper's GEBB_t property.
+    A: (M, K) with M % mesh.shape[axis] == 0;  B: (K, N) skinny.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+    shards = mesh.shape[axis]
+    local_plan = plan or make_plan(
+        Problem(m // shards, k, n, str(a.dtype), shards))
+
+    def local(a_blk, b_full):
+        if local_plan.prepack:
+            ap = pack(a_blk, local_plan.bm, local_plan.bk)
+            return ops.tsmm_packed(ap.blocks, b_full, impl=impl)[: a_blk.shape[0]]
+        return ops.tsmm(a_blk, b_full, bm=local_plan.bm, bk=local_plan.bk,
+                        impl=impl)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(P(axis, None), P(None, None)),
+                   out_specs=P(axis, None))
+    return fn(a, b)
+
+
+def conventional_ksplit(a, b, mesh: Mesh, axis: str = "data", *,
+                        impl: Optional[str] = None):
+    """Conventional-library decomposition: contraction dim split over the
+    mesh, partial products all-reduced.  The baseline the paper beats."""
+    def local(a_blk, b_blk):
+        part = jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+        return jax.lax.psum(part, axis).astype(a_blk.dtype)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(P(None, axis), P(axis, None)),
+                   out_specs=P(None, None))
+    return fn(a, b)
+
+
+def _shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """shard_map whose output replication the VMA type system can't prove
+    (ring accumulation makes outputs replicated only after all steps)."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
+def overlapped_ring_tsmm(a, b, mesh: Mesh, axis: str = "data", *,
+                         impl: Optional[str] = None):
+    """Beyond-paper: ring-pipelined TSMM for the case where A arrives
+    k-sharded (e.g. produced by an upstream TP layer) but we still want
+    the no-n-split output layout.  Each step multiplies the resident A
+    shard while ``ppermute``-ing the next one — collective/compute overlap
+    instead of a blocking all-gather.
+
+    A: (M, K) k-sharded over ``axis``; B: (K, N) k-sharded. Out: (M, N)
+    row-sharded... returns replicated (M, N) partial-sum-free result.
+    """
+    shards = mesh.shape[axis]
+
+    def local(a_blk, b_blk):
+        # a_blk: (M, K/s) local; b_blk: (K/s, N) local
+        idx = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % shards) for i in range(shards)]
+
+        def step(carry, _):
+            acc, a_cur, b_cur = carry
+            acc = acc + jnp.dot(a_cur, b_cur, preferred_element_type=jnp.float32)
+            a_nxt = jax.lax.ppermute(a_cur, axis, perm)
+            b_nxt = jax.lax.ppermute(b_cur, axis, perm)
+            return (acc, a_nxt, b_nxt), None
+
+        acc = jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32)
+        (acc, _, _), _ = jax.lax.scan(step, (acc, a_blk, b_blk), None,
+                                      length=shards)
+        return acc.astype(a_blk.dtype)
+
+    fn = _shard_map_unchecked(local, mesh, (P(None, axis), P(axis, None)),
+                              P(None, None))
+    return fn(a, b)

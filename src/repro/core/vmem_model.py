@@ -1,0 +1,119 @@
+"""The cache-blocked designer's predictive model, ported to VMEM.
+
+Paper (CPU):                         Here (TPU):
+  Eq.2  k_c * n_c <= L1/FPsize         working set of one grid step —
+  Eq.3  m_c * k_c <= L2/(2*FPsize)     double-buffered A and B blocks plus
+                                       the fp32 accumulator — must fit the
+                                       VMEM budget (hard constraint, since
+                                       VMEM is software-managed).
+
+Beyond feasibility, the model predicts per-plan compute/memory time so the
+autotuner can rank candidates *before* measuring (the paper's "search the
+tuning space with a predictive model").  The MXU-utilization factor is the
+TPU analogue of the paper's FMA-instruction-ratio argument for choosing
+12x8 over 16x4: a (bm,bk)x(bk,n) step only uses n/128 of the systolic
+array's output columns, so skinny-n TSMM is intrinsically bandwidth-bound
+(arithmetic intensity ~ n) and the model optimizes DMA traffic first.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hw import TPU_V5E, VMEM_USABLE_FRACTION, HwSpec, dtype_bytes
+from repro.core.plan import Plan, Problem
+
+# Fixed per-grid-step overhead (DMA issue + semaphores), calibrated order of
+# magnitude for v5e-class chips.
+GRID_STEP_OVERHEAD_S = 1.5e-7
+
+
+def _ceil(a, b):
+    return -(-a // b)
+
+
+def vmem_bytes_needed(plan: Plan, hw: HwSpec = TPU_V5E) -> int:
+    """Working set of one grid step, with 2x double buffering on streamed
+    operands and a single fp32 accumulator (the Pallas pipeline's actual
+    residency)."""
+    p = plan.problem
+    eb = dtype_bytes(p.dtype)
+    if plan.orientation == "tall_a":
+        n_pad = _ceil(p.n, 128) * 128
+        a_blk = plan.bm * plan.bk * eb
+        b_blk = plan.bk * n_pad * eb
+        acc = plan.bm * n_pad * 4
+        out = plan.bm * n_pad * eb
+    else:  # skinny_a
+        m_pad = _ceil(p.m, hw.sublane.get(p.dtype, 8)) * hw.sublane.get(p.dtype, 8)
+        a_blk = m_pad * plan.bk * eb          # streamed X panel
+        b_blk = plan.bk * plan.bn * eb        # streamed W block
+        acc = m_pad * plan.bn * 4
+        out = m_pad * plan.bn * eb
+    return 2 * (a_blk + b_blk) + acc + 2 * out
+
+
+def feasible(plan: Plan, hw: HwSpec = TPU_V5E) -> bool:
+    p = plan.problem
+    if plan.bm <= 0 or plan.bk <= 0 or plan.bn <= 0:
+        return False
+    # MXU/tile alignment: lane dim multiples of 128, sublane of 8/16
+    if plan.bk % 128 or plan.bn % 128:
+        return False
+    sl = hw.sublane.get(p.dtype, 8)
+    if plan.orientation == "tall_a" and plan.bm % sl:
+        return False
+    return vmem_bytes_needed(plan, hw) <= hw.vmem_bytes * VMEM_USABLE_FRACTION
+
+
+def hbm_traffic_bytes(plan: Plan) -> int:
+    """Total HBM bytes moved by one execution of the plan (compute only —
+    pre-pack traffic is a one-time cost amortized over reuse; see
+    cache-complexity analysis, paper Eq.4-6)."""
+    p = plan.problem
+    eb = dtype_bytes(p.dtype)
+    if plan.orientation == "tall_a":
+        nm, nk = _ceil(p.m, plan.bm), _ceil(p.k, plan.bk)
+        a = nm * nk * plan.bm * plan.bk * eb              # each A block once
+        b = nm * nk * plan.bk * _ceil(p.n, 128) * 128 * eb  # B reloaded per row
+        c = nm * plan.bm * _ceil(p.n, 128) * 128 * eb
+    else:
+        nn, nk = _ceil(p.n, plan.bn), _ceil(p.k, plan.bk)
+        m_pad = max(p.m, 8)
+        a = nn * nk * m_pad * plan.bk * eb                # X reloaded per col
+        b = nn * nk * plan.bk * plan.bn * eb              # each W block once
+        c = nn * m_pad * plan.bn * eb
+    return a + b + c
+
+
+def compute_time_s(plan: Plan, hw: HwSpec = TPU_V5E) -> float:
+    """MXU-occupancy-aware compute time: the systolic array processes
+    128-wide output tiles, so the skinny dim is padded up to 128."""
+    p = plan.problem
+    if plan.orientation == "tall_a":
+        eff_n = _ceil(p.n, 128) * 128
+        flops = 2.0 * p.m * p.k * eff_n
+    else:
+        eff_m = _ceil(max(p.m, 1), 8) * 8  # sublane padding
+        flops = 2.0 * eff_m * p.k * p.n
+    return flops / hw.peak_flops(p.dtype)
+
+
+def memory_time_s(plan: Plan, hw: HwSpec = TPU_V5E) -> float:
+    return hbm_traffic_bytes(plan) / hw.hbm_bw
+
+
+def predict(plan: Plan, hw: HwSpec = TPU_V5E) -> Plan:
+    """Attach predicted times + a scalar score (lower = better)."""
+    t_c = compute_time_s(plan, hw)
+    t_m = memory_time_s(plan, hw)
+    ng = plan.grid[0] * plan.grid[1]
+    score = max(t_c, t_m) + ng * GRID_STEP_OVERHEAD_S
+    return dataclasses.replace(plan, t_compute=t_c, t_memory=t_m, score=score)
+
+
+def pack_time_s(problem: Problem, hw: HwSpec = TPU_V5E) -> float:
+    """One-time pre-pack cost: read + write the tall operand."""
+    eb = dtype_bytes(problem.dtype)
+    tall_elems = problem.tall * problem.k
+    return 2 * tall_elems * eb / hw.hbm_bw

@@ -1,0 +1,104 @@
+"""Deterministic synthetic data pipeline.
+
+Tokens are a pure function of (seed, step, position) so every host
+materializes exactly its own shard (``jax.make_array_from_callback``) and a
+restarted/elastically-rescaled job regenerates identical batches — the
+property the fault-tolerance tests rely on.  The generator is a counter-
+mode hash (splitmix-style), not a Python RNG, so there is no state to
+checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def _splitmix(x: np.ndarray) -> np.ndarray:
+    x = (x + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    z = x
+    z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+    return z ^ (z >> np.uint64(31))
+
+
+def synth_tokens(seed: int, step: int, index, seq: int, vocab: int) -> np.ndarray:
+    """index: (b,) global batch indices -> (b, seq) int32 tokens."""
+    b = np.asarray(index, np.uint64)[:, None]
+    pos = np.arange(seq, dtype=np.uint64)[None, :]
+    key = (np.uint64(seed) << np.uint64(40)) ^ (np.uint64(step) << np.uint64(20))
+    return (_splitmix(b * np.uint64(1_000_003) + pos + key) % np.uint64(vocab)
+            ).astype(np.int32)
+
+
+@dataclasses.dataclass
+class SyntheticData:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    seed: int = 17
+    mesh: Optional[Mesh] = None
+    batch_spec: P = P(None)
+
+    def _sharding(self, spec: P):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def _global(self, shape, spec: P, fill):
+        """Build a global array shard-by-shard.
+
+        ``fill(rows) -> (len(rows), *shape[1:])`` — each device's callback
+        only materializes its own batch rows (host-local at pod scale).
+        """
+        sh = self._sharding(spec)
+        if sh is None:
+            return jnp.asarray(fill(np.arange(shape[0])))
+
+        def cb(idx):
+            rows = np.arange(shape[0])[idx[0]]
+            data = fill(rows)
+            return data[(slice(None),) + tuple(idx[1:])]
+
+        return jax.make_array_from_callback(shape, sh, cb)
+
+    def batch(self, step: int) -> dict:
+        cfg, sp = self.cfg, self.shape
+        b, s = sp.global_batch, sp.seq_len
+        n_img = cfg.num_image_tokens if cfg.embeds_input else 0
+        s_txt = s - n_img
+        spec_tok = P(*self.batch_spec, None)
+
+        def tok_fill(rows):
+            return synth_tokens(self.seed, step, rows, s_txt + 1, cfg.vocab_size)
+
+        toks = self._global((b, s_txt + 1), spec_tok, tok_fill)
+        batch = {"tokens": toks[:, :-1],
+                 "labels": jnp.concatenate(
+                     [jnp.full((b, n_img), -100, jnp.int32), toks[:, 1:]], axis=1)
+                 if n_img else toks[:, 1:]}
+        if cfg.embeds_input:
+            spec_e = P(*self.batch_spec, None, None)
+            def emb_fill(rows):
+                base = synth_tokens(self.seed, step + 7_777, rows, n_img,
+                                    1 << 16).astype(np.float32)
+                return (base[..., None] % 97 / 97.0 - 0.5).repeat(
+                    cfg.d_model, axis=-1).astype(np.float32)
+            batch["embeds"] = self._global((b, n_img, cfg.d_model), spec_e, emb_fill)
+        if cfg.is_encoder_decoder:
+            spec_e = P(*self.batch_spec, None, None)
+            def frame_fill(rows):
+                base = synth_tokens(self.seed, step + 3_333, rows,
+                                    cfg.encoder_seq, 1 << 16).astype(np.float32)
+                return (base[..., None] % 89 / 89.0 - 0.5).repeat(
+                    cfg.d_model, axis=-1).astype(np.float32)
+            batch["enc_frames"] = self._global((b, cfg.encoder_seq, cfg.d_model),
+                                               spec_e, frame_fill)
+        return batch

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels (and the blocked-XLA
+fallbacks in ops.py) are tested against, shape-for-shape and dtype-for-
+dtype, with fp32 accumulation semantics matching the kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def act_ref(x, act: str | None):
+    if act in (None, "none"):
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0)
+    if act == "silu":
+        return x * (1 / (1 + jnp.exp(-x)))
+    if act == "gelu":
+        # tanh approximation, matches the kernel epilogue exactly
+        return 0.5 * x * (1 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+    raise ValueError(act)
+
+
+def tsmm_ref(a, b, *, alpha=1.0, beta=0.0, c=None, bias=None, act=None):
+    """C = act(alpha * A @ B + beta * C + bias), fp32 accumulation.
+
+    A: (M, K)  B: (K, N).  The oracle for both orientations (tall-A with
+    skinny B, and skinny-A against a wide weight) — orientation only
+    changes which operand is pre-packed, not the math.
+    """
+    acc = jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    acc = alpha * acc
+    if beta != 0.0 and c is not None:
+        acc = acc + beta * c.astype(jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)[None, :]
+    acc = act_ref(acc, act)
+    return acc.astype(a.dtype)
+
+
+def pack_ref(a, bm, bk, *, alpha=1.0):
+    """Block-major pre-pack oracle: (M, K) -> (nm, nk, bm, bk), zero-padded.
+
+    Mirrors the paper's PACKA (which also folds alpha into the packed A).
+    """
+    m, k = a.shape
+    nm, nk = -(-m // bm), -(-k // bk)
+    ap = jnp.zeros((nm * bm, nk * bk), a.dtype).at[:m, :k].set(a * alpha)
+    return ap.reshape(nm, bm, nk, bk).transpose(0, 2, 1, 3)
+
+
+def unpack_ref(ap, m, k):
+    nm, nk, bm, bk = ap.shape
+    return ap.transpose(0, 2, 1, 3).reshape(nm * bm, nk * bk)[:m, :k]
+
+
+def tsmm_packed_ref(ap, b, m, *, bias=None, act=None):
+    """Oracle for the packed-A kernel: Ap (nm, nk, bm, bk) x B (K, N)."""
+    nm, nk, bm, bk = ap.shape
+    a = unpack_ref(ap, nm * bm, nk * bk)
+    bp = jnp.zeros((nk * bk, b.shape[1]), b.dtype).at[: b.shape[0]].set(b)
+    return tsmm_ref(a, bp, bias=bias, act=act)[:m]

@@ -1,0 +1,224 @@
+"""Pallas TPU kernels for tall-and-skinny matmul (the paper's inner kernels).
+
+Three kernels, all with fp32 VMEM accumulators and k-innermost revisiting
+grids (the Pallas idiom for the paper's GEBB_t accumulation):
+
+* ``tsmm_tall_a``      — A (M,K) tall x B (K,N) skinny, A in natural layout.
+* ``tsmm_packed_a``    — same, but A is PRE-PACKED block-major
+                         (nm, nk, bm, bk): each grid step DMAs one fully
+                         contiguous block — the TPU analogue of the paper's
+                         packed panels + per-thread headers (Fig. 3).
+* ``tsmm_skinny_a``    — X (m,K) skinny x W packed (nk, nn, bk, bn) with a
+                         fused bias+activation epilogue.  This is the decode
+                         hot path: weights packed once at load (pre-pack
+                         reuse), activations streamed.
+
+Register blocking (m_r x n_r = 12x8 etc. in the paper) maps to the MXU:
+block dims should be multiples of (sublane, 128); the autotuner enforces
+that, these kernels only assert it.  ``interpret=True`` runs the kernel
+body in Python on CPU — that is how this container validates them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compiler_params(dimension_semantics):
+    try:
+        return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+    except (AttributeError, TypeError):  # older naming
+        return pltpu.TPUCompilerParams(dimension_semantics=dimension_semantics)
+
+
+def _epilogue(acc, bias_ref, act):
+    out = acc
+    if bias_ref is not None:
+        out = out + bias_ref[...].astype(jnp.float32)[None, :]
+    if act == "relu":
+        out = jnp.maximum(out, 0)
+    elif act == "silu":
+        out = out * (1 / (1 + jnp.exp(-out)))
+    elif act == "gelu":
+        out = 0.5 * out * (1 + jnp.tanh(0.7978845608028654 * (out + 0.044715 * out**3)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 1. tall-A, natural layout
+# ---------------------------------------------------------------------------
+
+
+def _tall_a_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tsmm_tall_a(a, b, *, bm: int, bk: int, interpret: bool = False):
+    """C = A @ B.  A (M,K) with M % bm == 0, K % bk == 0; B (K,N), N is the
+    full skinny dim kept resident per grid step (the paper: every worker
+    holds the whole B block)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and k % bk == 0, (a.shape, b.shape, bm, bk)
+    nm, nk = m // bm, k // bk
+    return pl.pallas_call(
+        functools.partial(_tall_a_kernel, nk=nk),
+        grid=(nm, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
+        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# 2. tall-A, pre-packed block-major
+# ---------------------------------------------------------------------------
+
+
+def _packed_a_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[0, 0], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tsmm_packed_a(ap, b, *, interpret: bool = False):
+    """C = unpack(Ap) @ B with Ap (nm, nk, bm, bk) block-major.
+
+    Every A DMA is one contiguous (bm*bk)-element block — no strided HBM
+    reads, no relayout: the pre-pack payoff."""
+    nm, nk, bm, bk = ap.shape
+    k, n = b.shape
+    assert k == nk * bk, (ap.shape, b.shape)
+    return pl.pallas_call(
+        functools.partial(_packed_a_kernel, nk=nk),
+        grid=(nm, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((bk, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nm * bm, n), b.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
+        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(ap, b)
+
+
+# ---------------------------------------------------------------------------
+# 2b. on-device pre-pack (the paper's PACKA as a kernel)
+# ---------------------------------------------------------------------------
+
+
+def _pack_kernel(a_ref, o_ref, *, alpha):
+    blk = a_ref[...]
+    if alpha != 1.0:
+        blk = (blk.astype(jnp.float32) * alpha).astype(blk.dtype)
+    o_ref[0, 0] = blk
+
+
+def pack_blocks_kernel(a, bm: int, bk: int, *, alpha: float = 1.0,
+                       interpret: bool = False):
+    """(M, K) -> (nm, nk, bm, bk) block-major on-device re-tile.
+
+    One grid step = one (bm x bk) tile read strided, written contiguous —
+    the streaming layout transform the paper's pack module performs once
+    per reused operand.  Requires M % bm == 0 and K % bk == 0 (ops.py pads).
+    """
+    m, k = a.shape
+    assert m % bm == 0 and k % bk == 0, (a.shape, bm, bk)
+    nm, nk = m // bm, k // bk
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, alpha=alpha),
+        grid=(nm, nk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1, bm, bk), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nm, nk, bm, bk), a.dtype),
+        compiler_params=_compiler_params(("parallel", "parallel")),
+        interpret=interpret,
+    )(a)
+
+
+# ---------------------------------------------------------------------------
+# 3. skinny-A x packed weight, fused epilogue (decode hot path)
+# ---------------------------------------------------------------------------
+
+
+def _skinny_a_kernel(x_ref, w_ref, bias_ref, o_ref, acc_ref, *, nk, act):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[0, 0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == nk - 1)
+    def _done():
+        o_ref[...] = _epilogue(acc_ref[...], bias_ref, act).astype(o_ref.dtype)
+
+
+def _skinny_a_kernel_nobias(x_ref, w_ref, o_ref, acc_ref, *, nk, act):
+    _skinny_a_kernel(x_ref, w_ref, None, o_ref, acc_ref, nk=nk, act=act)
+
+
+def tsmm_skinny_a(x, wp, bias=None, *, act=None, interpret: bool = False):
+    """C = act(X @ unpack(Wp) + bias).
+
+    X (m, K) with skinny m (decode batch); Wp (nk, nn, bk, bn) packed
+    weights.  The whole X row-panel stays VMEM-resident across the grid
+    (paper: the skinny operand is never split)."""
+    m, k = x.shape
+    nk, nn, bk, bn = wp.shape
+    assert k == nk * bk, (x.shape, wp.shape)
+    n = nn * bn
+    in_specs = [
+        pl.BlockSpec((m, bk), lambda i, j: (0, j)),
+        pl.BlockSpec((1, 1, bk, bn), lambda i, j: (j, i, 0, 0)),
+    ]
+    args = [x, wp]
+    if bias is not None:
+        assert bias.shape == (n,), (bias.shape, n)
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (i,)))
+        args.append(bias)
+        kernel = functools.partial(_skinny_a_kernel, nk=nk, act=act)
+    else:
+        kernel = functools.partial(_skinny_a_kernel_nobias, nk=nk, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=(nn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((m, bn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
+        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)

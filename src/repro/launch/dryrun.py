@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline inputs.
+
+MUST be run as its own process (the XLA_FLAGS line above has to execute
+before jax initializes its backends — hence before any repro import).
+
+For each cell this produces a JSON artifact under
+``benchmarks/artifacts/dryrun/`` with:
+  * compiled.cost_analysis()  (per-device FLOPs / bytes)
+  * compiled.memory_analysis() (verbatim, backend-permitting)
+  * analytic per-device input bytes (params/opt/cache from shardings)
+  * the collective schedule parsed from the post-SPMD HLO with
+    ring-algorithm byte multipliers (see _collective_bytes)
+Artifacts are cached — re-runs skip completed cells (resumable sweep).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_405b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?((?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?(?:,\s*)?)+)(?:\))?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# explicit form: replica_groups={{0,1,2},{3,4,5}} -> n = len(first group)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+# iota form: replica_groups=[G,S]<=[...] -> n = S (group size)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "pred": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _collective_bytes(hlo_text: str) -> dict:
+    """Sum data moved per collective op kind from post-SPMD HLO.
+
+    Byte multipliers (ring algorithms, n = participants):
+      all-reduce         2(n-1)/n x tensor bytes
+      all-gather         (n-1)/n x output bytes
+      reduce-scatter     (n-1)/n x input  (~ output x (n-1))
+      all-to-all         (n-1)/n x tensor bytes
+      collective-permute 1 x tensor bytes
+    Numbers are per-device (the HLO module is the per-device program).
+    """
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_blob, op = m.group(1), m.group(2)
+        size = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_blob):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n_el = 1
+            for d in dims.split(","):
+                if d:
+                    n_el *= int(d)
+            size += n_el * _DTYPE_BYTES[dt]
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            n = int(gi.group(2)) if gi else 1
+        if n <= 1:
+            factor = 0.0
+        elif op == "all-reduce":
+            factor = 2 * (n - 1) / n
+        elif op in ("all-gather", "all-to-all"):
+            factor = (n - 1) / n
+        elif op == "reduce-scatter":
+            factor = float(n - 1)
+        else:  # collective-permute
+            factor = 1.0
+        rec = out.setdefault(op, {"count": 0, "bytes_moved": 0.0,
+                                  "tensor_bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes_moved"] += size * factor
+        rec["tensor_bytes"] += size
+    return out
+
+
+def _per_device_bytes(tree, shardings) -> float:
+    """Analytic per-device bytes for a (specs, shardings) input bundle."""
+    total = 0.0
+    for leaf, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec"))):
+        n_bytes = float(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        div = 1
+        if hasattr(sh, "spec"):
+            for ax in jax.tree.leaves(tuple(sh.spec)):
+                if ax is not None:
+                    div *= sh.mesh.shape[ax]
+        total += n_bytes / div
+    return total
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
+             opt_overrides: dict | None = None, tag: str = "",
+             cfg_overrides: dict | None = None,
+             opts_overrides: dict | None = None) -> dict:
+    from repro.configs.base import SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs, train_state_specs
+    from repro.models.registry import active_param_count
+    from repro.optim.adamw import OptConfig
+    from repro.serve.engine import pack_tree_for_serving
+    from repro.sharding.context import sharding_ctx
+    from repro.sharding.rules import param_pspecs
+    from repro.train.step import make_train_step
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_kind}{tag}"
+    art = ART_DIR / f"{name}.json"
+    if art.exists() and not force:
+        return json.loads(art.read_text())
+
+    t_start = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    bundle = input_specs(arch, shape_name, mesh, cfg_overrides=cfg_overrides,
+                         opts_overrides=opts_overrides)
+    model, cfg, sp, opts = (bundle["model"], bundle["cfg"], bundle["shape"],
+                            bundle["opts"])
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": dict(mesh.shape), "kind": sp.kind,
+           "n_params": bundle["n_params"],
+           "n_active_params": active_param_count(model),
+           "fsdp": opts.fsdp, "tag": tag}
+
+    with sharding_ctx(mesh, opts):
+        if sp.kind == "train":
+            ocfg = OptConfig(moment_dtype="bfloat16"
+                             if bundle["n_params"] > 5e10 else "float32",
+                             **(opt_overrides or {}))
+            state, state_sh, p_axes = train_state_specs(model, ocfg, mesh, opts)
+            step = make_train_step(model, ocfg, axes=p_axes)
+            jitted = jax.jit(step, in_shardings=(state_sh,
+                                                 bundle["batch_shardings"]))
+            args = (state, bundle["batch"])
+            in_bytes = (_per_device_bytes(state, state_sh)
+                        + _per_device_bytes(bundle["batch"],
+                                            bundle["batch_shardings"]))
+        elif sp.kind == "prefill":
+            params, axes = _abstract_params(model)
+            p_sh = _param_shardings(params, axes, mesh, opts)
+            jitted = jax.jit(model.prefill,
+                             in_shardings=(p_sh, bundle["batch_shardings"],
+                                           bundle["cache_shardings"]))
+            args = (params, bundle["batch"], bundle["cache"])
+            in_bytes = (_per_device_bytes(params, p_sh)
+                        + _per_device_bytes(bundle["cache"],
+                                            bundle["cache_shardings"]))
+        else:  # decode
+            params, axes = _abstract_params(model)
+            packed = jax.eval_shape(
+                lambda p: pack_tree_for_serving(p, axes, sp.global_batch,
+                                                mesh, opts)[0], params)
+            rec["packed_leaves"] = sum(
+                1 for x in jax.tree.leaves(
+                    packed, is_leaf=lambda y: hasattr(y, "blocks"))
+                if hasattr(x, "blocks"))
+            p_sh = _param_shardings(packed, axes, mesh, opts)
+            jitted = jax.jit(model.decode_step,
+                             in_shardings=(p_sh, bundle["cache_shardings"],
+                                           bundle["tokens_sharding"]))
+            args = (packed, bundle["cache"], bundle["tokens"])
+            in_bytes = (_per_device_bytes(packed, p_sh)
+                        + _per_device_bytes(bundle["cache"],
+                                            bundle["cache_shardings"]))
+
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    # scan-aware analytic cost (global program, all devices) — see
+    # repro/analysis/jaxpr_cost.py for why compiled.cost_analysis() alone
+    # is insufficient (while-loop bodies counted once).
+    try:
+        from repro.analysis.jaxpr_cost import analyze_fn
+        target = (step if sp.kind == "train"
+                  else model.prefill if sp.kind == "prefill"
+                  else model.decode_step)
+        rec["jaxpr_cost"] = analyze_fn(target, *args).to_json()
+    except Exception as e:  # noqa: BLE001
+        rec["jaxpr_cost"] = {"error": str(e)}
+
+    rec["lower_s"], rec["compile_s"] = t1 - t0, t2 - t1
+    rec["in_bytes_per_device"] = in_bytes
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        keep = ("flops", "transcendentals", "bytes accessed",
+                "bytes accessedout", "optimal_seconds")
+        rec["cost_analysis"] = {k: float(ca[k]) for k in keep
+                                if k in ca and isinstance(ca[k], (int, float))}
+    except Exception as e:  # noqa: BLE001
+        rec["cost_analysis"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # noqa: BLE001
+        rec["memory_analysis"] = {"error": str(e)}
+    try:
+        # trip-count-aware accounting (collectives inside layer/microbatch
+        # scans execute trip times; see analysis/hlo_collectives.py)
+        from repro.analysis.hlo_collectives import collective_bytes
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt)
+        rec["collectives_static"] = _collective_bytes(txt)
+    except Exception as e:  # noqa: BLE001
+        rec["collectives"] = {"error": str(e)}
+    rec["wall_s"] = time.time() - t_start
+
+    art.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def _abstract_params(model):
+    captured = {}
+
+    def _f():
+        p, a = model.init(jax.random.PRNGKey(0))
+        captured["axes"] = a
+        return p
+
+    params = jax.eval_shape(_f)
+    return params, captured["axes"]
+
+
+def _param_shardings(params, axes, mesh, opts):
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.rules import param_pspecs
+    specs = param_pspecs(axes, params, mesh, opts)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def main():
+    from repro.configs.base import all_cells
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = (all_cells() if args.all
+             else [(args.arch, args.shape)])
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            key = f"{arch} x {shape} x {mk}"
+            try:
+                rec = run_cell(arch, shape, mk, force=args.force)
+                ca = rec.get("cost_analysis", {})
+                coll = rec.get("collectives", {})
+                cbytes = sum(v.get("bytes_moved", 0) for v in coll.values()
+                             if isinstance(v, dict))
+                print(f"OK  {key:55s} flops/dev={ca.get('flops', float('nan')):.3e} "
+                      f"coll_bytes/dev={cbytes:.3e} "
+                      f"in_bytes/dev={rec['in_bytes_per_device']:.3e} "
+                      f"compile={rec.get('compile_s', 0):.1f}s")
+            except Exception as e:  # noqa: BLE001
+                failures.append((key, str(e)))
+                print(f"FAIL {key}: {e}")
+                traceback.print_exc()
+    print(f"\n{len(cells) * len(meshes) - len(failures)} ok, "
+          f"{len(failures)} failed")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

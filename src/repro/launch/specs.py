@@ -1,0 +1,180 @@
+"""ShapeDtypeStruct input specs + sharding specs for every (arch x shape)
+cell — the dry-run's stand-ins (weak-type-correct, shardable, zero
+allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, get_config
+from repro.models.registry import ModelDef, build_model, param_count
+from repro.optim.adamw import OptConfig
+from repro.sharding.context import ShardCtx
+from repro.sharding.rules import ShardingOptions, param_pspecs
+
+# FSDP threshold: shard params over the data axis for >= 8B-param archs.
+FSDP_MIN_PARAMS = 8_000_000_000
+
+
+def sharding_options(mesh: Mesh, n_params: int) -> ShardingOptions:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    fsdp = n_params >= FSDP_MIN_PARAMS
+    return ShardingOptions(tp_axis="model", dp_axes=dp, fsdp=fsdp,
+                           fsdp_axes=dp)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, sp: ShapeSpec, *, with_labels: bool):
+    """ShapeDtypeStructs for one input batch + logical axes per leaf."""
+    b, s = sp.global_batch, sp.seq_len
+    n_img = cfg.num_image_tokens if cfg.embeds_input else 0
+    s_txt = s - n_img
+    specs = {"tokens": _sds((b, s_txt), jnp.int32)}
+    axes = {"tokens": ("batch", "seq")}
+    if with_labels:
+        specs["labels"] = _sds((b, s), jnp.int32)
+        axes["labels"] = ("batch", "seq")
+    if cfg.embeds_input:
+        specs["embeds"] = _sds((b, n_img, cfg.d_model), jnp.bfloat16)
+        axes["embeds"] = ("batch", "seq", "embed")
+    if cfg.is_encoder_decoder:
+        specs["enc_frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        axes["enc_frames"] = ("batch", "seq", "embed")
+    return specs, axes
+
+
+CACHE_AXES = {
+    "pos": (),
+    "slot_pos": (None,),
+    # cache_seq: falls back to the model axis when kvheads can't take it
+    # (GQA kv < tp) — the sequence-sharded KV cache for long-context decode.
+    # cache_batch: dp-sharded even under serve_2d_tp (compute-path batch
+    # replication must not blow up cache residency).
+    "k": ("layers", "cache_batch", "cache_seq", "kvheads", "headdim"),
+    "v": ("layers", "cache_batch", "cache_seq", "kvheads", "headdim"),
+    "c": ("layers", "cache_batch", "cache_seq", "lora"),
+    "kr": ("layers", "cache_batch", "cache_seq", "rope"),
+    "ssm": ("layers", "cache_batch", "ssm_heads", "headdim", "state"),
+    "conv": ("layers", "cache_batch", "conv", "ssm_inner"),
+    "cross_k": ("layers", "cache_batch", "seq", "kvheads", "headdim"),
+    "cross_v": ("layers", "cache_batch", "seq", "kvheads", "headdim"),
+}
+
+
+def cache_axes_for(cfg: ModelConfig, key: str, ndim: int):
+    base = key
+    if key.startswith("dense") and "_" in key:
+        base = key.split("_", 1)[1]
+    ax = CACHE_AXES.get(base)
+    if ax is None:
+        return (None,) * ndim
+    if len(ax) == ndim:
+        return ax
+    if len(ax) == ndim - 1:          # hybrid: extra leading 'groups' dim
+        return ("groups",) + ax
+    if len(ax) == ndim + 1:          # dense{i}_* lack the layer dim
+        return ax[1:]
+    return (None,) * ndim
+
+
+def input_specs(arch: str, shape_name: str, mesh: Optional[Mesh] = None,
+                cfg_overrides: Optional[dict] = None,
+                opts_overrides: Optional[dict] = None):
+    """Everything the dry-run needs for one cell.
+
+    Returns dict with: model, cfg, opts, and per-kind spec bundles.
+    ``cfg_overrides``/``opts_overrides``: §Perf variant knobs (e.g.
+    {"remat": False} / {"sequence_parallel": "model"}).
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    sp = SHAPES[shape_name]
+    model = build_model(cfg)
+    n = param_count(model)
+    opts = sharding_options(mesh, n) if mesh is not None else ShardingOptions()
+    if sp.kind == "decode" and opts.fsdp:
+        # §Perf C2: 2D weight-stationary TP is the default decode layout
+        # for models whose weights need both mesh axes — weights never
+        # move, only the skinny activation panels do (the paper's rule).
+        opts = dataclasses.replace(opts, serve_2d_tp=True)
+    if opts_overrides:
+        opts = dataclasses.replace(opts, **opts_overrides)
+    ctx = ShardCtx(mesh, opts) if mesh is not None else None
+
+    def shard(specs, axes):
+        if ctx is None:
+            return specs
+        return {k: NamedSharding(mesh, ctx.spec_for(axes[k], specs[k].shape))
+                for k in specs}
+
+    out = {"cfg": cfg, "model": model, "shape": sp, "opts": opts,
+           "n_params": n}
+
+    if sp.kind == "train":
+        specs, axes = batch_specs(cfg, sp, with_labels=True)
+        out["batch"] = specs
+        out["batch_shardings"] = shard(specs, axes) if ctx else None
+    elif sp.kind == "prefill":
+        specs, axes = batch_specs(cfg, sp, with_labels=False)
+        cache = jax.eval_shape(lambda: model.init_cache(sp.global_batch, sp.seq_len))
+        out["batch"] = specs
+        out["batch_shardings"] = shard(specs, axes) if ctx else None
+        out["cache"] = cache
+        out["cache_shardings"] = cache_shardings(cfg, cache, mesh, opts) if ctx else None
+    else:  # decode
+        cache = jax.eval_shape(lambda: model.init_cache(sp.global_batch, sp.seq_len))
+        # a filled cache: pos = seq_len - 1 semantics are irrelevant for
+        # lowering (ShapeDtypeStructs carry no values)
+        out["tokens"] = _sds((sp.global_batch, 1), jnp.int32)
+        out["tokens_sharding"] = (NamedSharding(
+            mesh, ctx.spec_for(("batch", None), (sp.global_batch, 1)))
+            if ctx else None)
+        out["cache"] = cache
+        out["cache_shardings"] = cache_shardings(cfg, cache, mesh, opts) if ctx else None
+    return out
+
+
+def cache_shardings(cfg, cache_specs, mesh, opts):
+    ctx = ShardCtx(mesh, opts)
+    out = {}
+    for key, leaf in cache_specs.items():
+        ax = cache_axes_for(cfg, key, leaf.ndim)
+        out[key] = NamedSharding(mesh, ctx.spec_for(ax, leaf.shape))
+    return out
+
+
+def train_state_specs(model: ModelDef, ocfg: OptConfig, mesh, opts):
+    """(state ShapeDtypeStructs, state NamedShardings) for the train step."""
+    from repro.train.step import init_train_state
+
+    captured = {}
+
+    def _abstract():
+        st, axes = init_train_state(model, ocfg, jax.random.PRNGKey(0))
+        captured["axes"] = axes          # python-side tree of logical names
+        return st
+
+    state = jax.eval_shape(_abstract)
+    axes = captured["axes"]
+    p_specs = param_pspecs(axes, state["params"], mesh, opts)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    opt_sh = {"m": p_sh, "v": p_sh,
+              "count": NamedSharding(mesh, P())}
+    if "ef" in state["opt"]:
+        opt_sh["ef"] = p_sh
+    sh = {"params": p_sh, "opt": opt_sh,
+          "step": NamedSharding(mesh, P())}
+    return state, sh, axes

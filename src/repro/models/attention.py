@@ -1,0 +1,317 @@
+"""Attention: chunked (flash-style) GQA for train/prefill, cache-based
+decode, sliding-window variants, and MLA (DeepSeek-V2) with the absorbed
+decode formulation over the compressed KV cache.
+
+The train/prefill path scans over query and key chunks with online softmax
+so peak memory is O(chunk^2), never O(S^2) — required for the 32k prefill
+cells to fit.  Decode (one token against a cache) is a single masked
+einsum: O(S) — this is the TSMM-shaped regime the paper's technique
+serves (skinny activations against wide projection weights).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import linear
+from repro.models.layers import apply_rope, rope_tables
+from repro.models.param import ParamTree
+from repro.sharding.context import shard_act
+
+NEG_INF = -1e30
+
+
+def _divisor_chunk(s: int, chunk: int) -> int:
+    """Largest chunk <= `chunk` that divides s (1500 -> 500 for whisper)."""
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_body(q, k, v, q_pos, k_pos, scale, window, causal):
+    """One (q-chunk x k-chunk) tile.  q: (B,Cq,KH,G,D) k/v: (B,Ck,KH,D)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(mask[None, None, None], s, NEG_INF)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      chunk: int = 512, q_offset: int = 0):
+    """q: (B,Sq,H,D)  k,v: (B,Sk,KH,D).  Returns (B,Sq,H,D).
+
+    Online-softmax double scan: outer over q chunks (sequential, O(1)
+    extra memory), inner over k chunks (carries m/l/acc).
+
+    On TPU, full-window self-attention dispatches to the fused Pallas
+    flash kernel (kernels/flash_attention.py): scores stay in VMEM and
+    above-diagonal blocks are skipped — the jnp path below is the CPU /
+    SWA / cross-attention fallback and the kernel's oracle.
+    """
+    if (jax.default_backend() == "tpu" and window == 0 and q_offset == 0
+            and q.shape[1] == k.shape[1] and q.shape[1] % 256 == 0):
+        from repro.kernels.flash_attention import flash_attention
+        g = q.shape[2] // k.shape[2]
+        kr = jnp.repeat(k, g, axis=2) if g > 1 else k
+        vr = jnp.repeat(v, g, axis=2) if g > 1 else v
+        out = flash_attention(q.transpose(0, 2, 1, 3),
+                              kr.transpose(0, 2, 1, 3),
+                              vr.transpose(0, 2, 1, 3), causal=causal)
+        return out.transpose(0, 2, 1, 3)
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]          # may differ from d (MLA: dk=nope+rope, dv=v)
+    g = h // kh
+    scale = d ** -0.5
+    cq = _divisor_chunk(sq, chunk)
+    ck = _divisor_chunk(sk, chunk)
+    nq, nk = sq // cq, sk // ck
+
+    qg = q.reshape(b, nq, cq, kh, g, d)
+    kc = k.reshape(b, nk, ck, kh, d)
+    vc = v.reshape(b, nk, ck, kh, dv)
+
+    def q_step(_, qi):
+        qc, qpos = qi
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kb, vb, kpos = ki
+            s = _chunk_body(qc, kb, vb, qpos, kpos, scale, window, causal)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb, preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, cq, dv), jnp.float32)
+        kpos_all = (jnp.arange(nk * ck) ).reshape(nk, ck)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kpos_all))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    qpos_all = (q_offset + jnp.arange(nq * cq)).reshape(nq, cq)
+    _, outs = jax.lax.scan(q_step, None,
+                           (qg.transpose(1, 0, 2, 3, 4, 5), qpos_all))
+    # outs: (nq, b, kh, g, cq, dv) -> (b, sq, h, dv)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
+
+
+def decode_attention(q, k_cache, v_cache, k_pos, cur_pos, *, window: int = 0):
+    """One-step attention.  q: (B,1,H,D); caches: (B,S,KH,D);
+    k_pos: (S,) absolute positions held by each cache slot (-1 = empty)."""
+    b, _, h, d = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * d ** -0.5
+    valid = (k_pos >= 0) & (k_pos <= cur_pos)
+    if window:
+        valid &= cur_pos - k_pos < window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(rng, cfg, d_in: int = 0, d_out: int = 0):
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d_in = d_in or d
+    pt = ParamTree(rng, cfg.dtype)
+    pt.dense("wq", (d_in, h * hd), ("embed", "qheads"))
+    pt.dense("wk", (d_in, kh * hd), ("embed", "kvheads"))
+    pt.dense("wv", (d_in, kh * hd), ("embed", "kvheads"))
+    pt.dense("wo", (h * hd, d_out or d), ("qheads", "embed"))
+    if cfg.qkv_bias:
+        pt.zeros("bq", (h * hd,), ("qheads",))
+        pt.zeros("bk", (kh * hd,), ("kvheads",))
+        pt.zeros("bv", (kh * hd,), ("kvheads",))
+    return pt.build()
+
+
+def _qkv(p, cfg, x, kv_from=None):
+    b, s, _ = x.shape
+    src = x if kv_from is None else kv_from
+    sk = src.shape[1]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(b, s, h, hd)
+    k = linear(src, p["wk"], p.get("bk")).reshape(b, sk, kh, hd)
+    v = linear(src, p["wv"], p.get("bv")).reshape(b, sk, kh, hd)
+    return q, k, v
+
+
+def gqa_forward(p, cfg, x, *, causal=True, pos_offset: int = 0,
+                chunk: int = 512, use_rope: bool = True, kv_from=None):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v)).
+    ``kv_from``: cross-attention source sequence (whisper decoder)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, kv_from=kv_from)
+    pos = pos_offset + jnp.arange(s)
+    if use_rope:
+        cos, sin = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = shard_act(q, "batch", "seq", "heads", None)
+    k = shard_act(k, "batch", "seq", "kvheads", None)
+    v = shard_act(v, "batch", "seq", "kvheads", None)
+    out = chunked_attention(q, k, v, causal=causal,
+                            window=cfg.sliding_window, chunk=chunk,
+                            q_offset=pos_offset)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"]), (k, v)
+
+
+def gqa_decode(p, cfg, x, cache_k, cache_v, slot_pos, cur_pos, *,
+               use_rope: bool = True):
+    """One token.  x: (B,1,d).  Caches (B,S,KH,D); slot_pos (S,) absolute
+    positions per slot.  Batch is position-aligned (continuous batching
+    with aligned steps — see serve/engine.py)."""
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x)
+    cur = jnp.asarray(cur_pos, jnp.int32)
+    if use_rope:
+        cos, sin = rope_tables(cur[None], cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    slot = cur % cache_k.shape[1] if cfg.sliding_window else cur
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(slot_pos, cur[None], (slot,))
+    out = decode_attention(q, cache_k, cache_v, slot_pos, cur,
+                           window=cfg.sliding_window)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"]), cache_k, cache_v, slot_pos
+
+
+def cross_decode(p, cfg, x, cross_k, cross_v):
+    """Decoder cross-attention step: q from x, cached K/V from the encoder
+    (computed ONCE per utterance — the pre-pack data-reuse story)."""
+    b = x.shape[0]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(b, 1, h, hd)
+    kpos = jnp.arange(cross_k.shape[1])
+    out = decode_attention(q, cross_k, cross_v, kpos, cross_k.shape[1] - 1)
+    return linear(out.reshape(b, 1, h * hd), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank q/kv, decoupled rope, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla(rng, cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    pt = ParamTree(rng, cfg.dtype)
+    pt.dense("wq_a", (d, qr), ("embed", "lora"))
+    pt.ones("q_norm", (qr,), ("lora",))
+    pt.dense("wq_b", (qr, h * (dn + dr)), ("lora", "qheads"))
+    pt.dense("wkv_a", (d, kvr + dr), ("embed", "lora"))
+    pt.ones("kv_norm", (kvr,), ("lora",))
+    pt.dense("wkv_b", (kvr, h * (dn + dv)), ("lora", "qheads"))
+    pt.dense("wo", (h * dv, d), ("qheads", "embed"))
+    return pt.build()
+
+
+def _mla_qkv_train(p, cfg, x, pos):
+    from repro.models.layers import rmsnorm
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    cq = rmsnorm(linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+    q = linear(cq, p["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv = linear(x, p["wkv_a"])
+    c_kv = rmsnorm(ckv[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv[..., cfg.kv_lora_rank:][:, :, None, :]      # (B,S,1,dr)
+    kv = linear(c_kv, p["wkv_b"]).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    cos, sin = rope_tables(pos, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, s, h, dr))], axis=-1)
+    return q_full, k_full, v, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_forward(p, cfg, x, *, pos_offset: int = 0, chunk: int = 512):
+    """Train/prefill MLA.  Returns (out, (c_kv, k_rope)) for the cache."""
+    b, s, _ = x.shape
+    pos = pos_offset + jnp.arange(s)
+    q, k, v, c_kv, k_rope = _mla_qkv_train(p, cfg, x, pos)
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk,
+                            q_offset=pos_offset)
+    # note: softmax scale uses full q dim (dn+dr) inside chunked_attention
+    out = out.reshape(b, s, cfg.num_heads * cfg.v_head_dim)
+    return linear(out, p["wo"]), (c_kv, k_rope)
+
+
+def mla_decode(p, cfg, x, cache_c, cache_kr, cur_pos):
+    """Absorbed-matrix decode over the compressed cache.
+
+    cache_c: (B,S,kvr)  cache_kr: (B,S,dr).  The q_nope->c-space and
+    c->v absorbtions avoid materializing per-head K/V for 32k positions —
+    and both absorbed GEMMs are TSMM-shaped (B x kvr against wide heads).
+    """
+    from repro.models.layers import rmsnorm
+    b = x.shape[0]
+    h, dn, dr, dv, kvr = (cfg.num_heads, cfg.head_dim, cfg.rope_head_dim,
+                          cfg.v_head_dim, cfg.kv_lora_rank)
+    cq = rmsnorm(linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+    q = linear(cq, p["wq_b"]).reshape(b, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_tables(jnp.asarray([cur_pos]), dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope[:, None], cos, sin)[:, 0]     # (B,h,dr)
+
+    ckv = linear(x[:, 0], p["wkv_a"])
+    c_new = rmsnorm(ckv[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    kr_new = ckv[..., kvr:]
+    kr_new = apply_rope(kr_new[:, None, None], cos, sin)[:, 0, 0]
+    cache_c = jax.lax.dynamic_update_slice(cache_c, c_new[:, None], (0, cur_pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(cache_kr, kr_new[:, None], (0, cur_pos, 0))
+
+    wkv_b = p["wkv_b"]
+    w = wkv_b.unpack() if hasattr(wkv_b, "unpack") else wkv_b
+    w = w.reshape(kvr, h, dn + dv)
+    w_uk, w_uv = w[..., :dn], w[..., dn:]
+    q_c = jnp.einsum("bhd,chd->bhc", q_nope, w_uk,
+                     preferred_element_type=jnp.float32)     # absorb into c-space
+    s = (jnp.einsum("bhc,bsc->bhs", q_c, cache_c.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                      cache_kr.astype(jnp.float32)))
+    s = s * (dn + dr) ** -0.5
+    valid = jnp.arange(cache_c.shape[1]) <= cur_pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhs,bsc->bhc", pattn, cache_c.astype(jnp.float32))
+    o = jnp.einsum("bhc,chv->bhv", o_c, w_uv).astype(x.dtype)
+    out = linear(o.reshape(b, 1, h * dv), p["wo"])
+    return out, cache_c, cache_kr

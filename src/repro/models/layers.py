@@ -1,0 +1,130 @@
+"""Shared layers: norms, RoPE, embeddings, MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import linear
+from repro.models.param import ParamTree
+from repro.sharding.context import shard_act
+
+
+def rmsnorm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions, dim: int, theta: float):
+    """cos/sin tables for given integer positions (any shape)."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (S, D/2) or broadcastable (..., S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch + heads
+        cos = cos[:, None, :]
+        sin = sin[:, None, :]
+    else:  # (B, S, half)
+        cos = cos[..., None, :]
+        sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+                           ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU + plain GELU variants)
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(rng, d_model: int, d_ff: int, dtype, d_out: int = 0):
+    pt = ParamTree(rng, dtype)
+    pt.dense("w_gate", (d_model, d_ff), ("embed", "mlp"))
+    pt.dense("w_up", (d_model, d_ff), ("embed", "mlp"))
+    pt.dense("w_down", (d_ff, d_out or d_model), ("mlp", "embed"))
+    return pt.build()
+
+
+def swiglu(p, x):
+    h = linear(x, p["w_gate"], act="silu") * linear(x, p["w_up"])
+    h = shard_act(h, "batch", "seq", "mlp")
+    return linear(h, p["w_down"])
+
+
+def init_gelu_mlp(rng, d_model: int, d_ff: int, dtype, d_out: int = 0):
+    pt = ParamTree(rng, dtype)
+    pt.dense("w_in", (d_model, d_ff), ("embed", "mlp"))
+    pt.zeros("b_in", (d_ff,), ("mlp",))
+    pt.dense("w_out", (d_ff, d_out or d_model), ("mlp", "embed"))
+    pt.zeros("b_out", (d_out or d_model,), ("embed",))
+    return pt.build()
+
+
+def sinusoidal_pos(positions, dim: int):
+    """Fixed sinusoidal position encoding (whisper stub adaptation: the
+    reference model uses learned decoder embeddings; sinusoidal keeps the
+    param shapes independent of max sequence length)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def gelu_mlp(p, x):
+    h = linear(x, p["w_in"], p["b_in"], act="gelu")
+    h = shard_act(h, "batch", "seq", "mlp")
+    return linear(h, p["w_out"], p["b_out"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(rng, vocab: int, d_model: int, dtype, tie: bool):
+    pt = ParamTree(rng, dtype)
+    pt.embed("tok", (vocab, d_model), ("vocab", "embed"))
+    if not tie:
+        pt.dense("head", (d_model, vocab), ("embed", "vocab"))
+    return pt.build()
+
+
+def embed_tokens(p, tokens):
+    out = jnp.take(p["tok"], tokens, axis=0)
+    return shard_act(out, "batch", "seq", "embed")
+
+
+def unembed(p, x, tie: bool):
+    # logits stay in compute dtype; losses upcast internally.  bf16 logits
+    # keep the backward cotangent chain bf16 (halves every TP activation
+    # all-reduce in the backward pass — §Perf B4) and halve the logits
+    # buffer (B x S x vocab is the largest activation in the program).
+    w = p["tok"].T if tie else p["head"]
+    logits = linear(x, w)
+    return shard_act(logits, "batch", "seq", "vocab")

@@ -1,0 +1,313 @@
+"""LM assembly: dense / MoE / SSM / VLM stacks with layer-scan.
+
+One scanned homogeneous block stack (+ optional unscanned leading dense
+layers for deepseek-style ``first_k_dense``), pre-norm residual blocks,
+tied or separate unembedding.  ``jax.checkpoint`` wraps the scan body when
+``cfg.remat`` (full-recompute policy by default; the §Perf hillclimb
+explores ``dots_saveable``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models.layers import (embed_tokens, init_embed, init_swiglu,
+                                 rmsnorm, swiglu, unembed)
+from repro.models.param import ParamTree, stack_inits
+from repro.sharding.context import shard_act
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/forward/decode
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(rng, cfg, kind: str):
+    """kind: 'dense' | 'moe' | 'ssm'."""
+    pt = ParamTree(rng, cfg.dtype)
+    if kind == "ssm":
+        pt.ones("ln1", (cfg.d_model,), ("embed",))
+        pt.sub("mamba", M.init_mamba2(jax.random.fold_in(rng, 1), cfg))
+        return pt.build()
+    pt.ones("ln1", (cfg.d_model,), ("embed",))
+    if cfg.use_mla:
+        pt.sub("attn", A.init_mla(jax.random.fold_in(rng, 1), cfg))
+    else:
+        pt.sub("attn", A.init_gqa(jax.random.fold_in(rng, 1), cfg))
+    pt.ones("ln2", (cfg.d_model,), ("embed",))
+    if kind == "moe":
+        pt.sub("mlp", MOE.init_moe(jax.random.fold_in(rng, 2), cfg))
+    else:
+        pt.sub("mlp", init_swiglu(jax.random.fold_in(rng, 2), cfg.d_model,
+                                  cfg.d_ff, cfg.dtype))
+    return pt.build()
+
+
+def _layer_fwd(p, cfg, x, kind: str, *, pos_offset=0, chunk=512):
+    """Returns (x, kv_for_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h, (ssm, conv) = M.mamba2_forward(p["mamba"], cfg,
+                                          rmsnorm(x, p["ln1"], cfg.norm_eps))
+        return x + h, (ssm, conv), aux
+    hin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        h, kv = A.mla_forward(p["attn"], cfg, hin, pos_offset=pos_offset,
+                              chunk=chunk)
+    else:
+        h, kv = A.gqa_forward(p["attn"], cfg, hin, pos_offset=pos_offset,
+                              chunk=chunk)
+    x = x + h
+    hin = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        h, aux = MOE.moe_apply(p["mlp"], cfg, hin)
+    else:
+        h = swiglu(p["mlp"], hin)
+    return x + h, kv, aux
+
+
+def _layer_decode(p, cfg, x, lcache, slot_pos, pos, kind: str):
+    """One-token step through one layer.  Returns (x, new_lcache)."""
+    if kind == "ssm":
+        h, ssm, conv = M.mamba2_decode(p["mamba"], cfg,
+                                       rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                       lcache[0], lcache[1], pos)
+        return x + h, (ssm, conv)
+    hin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        h, c, kr = A.mla_decode(p["attn"], cfg, hin, lcache[0], lcache[1], pos)
+        new = (c, kr)
+    else:
+        h, ck, cv, _ = A.gqa_decode(p["attn"], cfg, hin, lcache[0], lcache[1],
+                                    slot_pos, pos)
+        new = (ck, cv)
+    x = x + h
+    hin = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        h, _ = MOE.moe_apply(p["mlp"], cfg, hin)
+    else:
+        h = swiglu(p["mlp"], hin)
+    return x + h, new
+
+
+def _kind(cfg) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "moe":
+        return "moe"
+    return "dense"  # dense / vlm share the block
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(cfg, rng):
+    kind = _kind(cfg)
+    pt = ParamTree(rng, cfg.dtype)
+    pt.sub("embed", init_embed(jax.random.fold_in(rng, 0), cfg.vocab_size,
+                               cfg.d_model, cfg.dtype, cfg.tie_embeddings))
+    n_scan = cfg.num_layers - cfg.first_k_dense
+    for i in range(cfg.first_k_dense):
+        pt.sub(f"dense{i}", _init_layer(jax.random.fold_in(rng, 1000 + i),
+                                        cfg, "dense"))
+    pt.sub("layers", stack_inits(
+        lambda r: _init_layer(r, cfg, kind), jax.random.fold_in(rng, 1), n_scan))
+    pt.ones("final_norm", (cfg.d_model,), ("embed",))
+    return pt.build()
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _inputs_to_h(params, cfg, batch):
+    """tokens (+ vlm embeds) -> first hidden states."""
+    if cfg.embeds_input:
+        tok = embed_tokens(params["embed"], batch["tokens"])
+        x = jnp.concatenate([batch["embeds"].astype(tok.dtype), tok], axis=1)
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"])
+    return shard_act(x, "batch", "seq", "embed")
+
+
+def lm_forward(params, cfg, batch, *, collect_cache: bool = False,
+               pos_offset: int = 0, chunk: int = 512):
+    """Returns (logits f32, aux_loss, kv_stack | None)."""
+    kind = _kind(cfg)
+    x = _inputs_to_h(params, cfg, batch)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    dense_kvs = {}
+    for i in range(cfg.first_k_dense):
+        x, kv, aux = _layer_fwd(params[f"dense{i}"], cfg, x, "dense",
+                                pos_offset=pos_offset, chunk=chunk)
+        if collect_cache:
+            dense_kvs[i] = kv
+        aux_total = aux_total + aux
+
+    def body(xc, lp):
+        xo, kv, aux = _layer_fwd(lp, cfg, xc, kind, pos_offset=pos_offset,
+                                 chunk=chunk)
+        return xo, (kv if collect_cache else None, aux)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, (kvs, auxs) = jax.lax.scan(body, x, params["layers"])
+        aux_total = aux_total + auxs.sum()
+    else:
+        kvs_list = []
+        n_scan = cfg.num_layers - cfg.first_k_dense
+        for i in range(n_scan):
+            lp = jax.tree.map(lambda v: v[i], params["layers"])
+            x, (kv, aux) = body(x, lp)
+            kvs_list.append(kv)
+            aux_total = aux_total + aux
+        kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *kvs_list)
+               if collect_cache else None)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    return logits, aux_total, (kvs, dense_kvs) if collect_cache else (None, None)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    """Zeroed decode cache (also the dry-run ShapeDtypeStruct template)."""
+    kind = _kind(cfg)
+    n_scan = cfg.num_layers - cfg.first_k_dense
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if kind == "ssm":
+        di, h, p_, n, g = (cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state, cfg.ssm_groups)
+        cache["ssm"] = jnp.zeros((n_scan, batch_size, h, p_, n), jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (n_scan, batch_size, cfg.ssm_conv - 1, di + 2 * g * n), dt)
+        return cache
+    slots = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    cache["slot_pos"] = jnp.full((slots,), -1, jnp.int32)
+    if cfg.use_mla:
+        cache["c"] = jnp.zeros((n_scan, batch_size, slots, cfg.kv_lora_rank), dt)
+        cache["kr"] = jnp.zeros((n_scan, batch_size, slots, cfg.rope_head_dim), dt)
+    else:
+        kh, hd = cfg.num_kv_heads, cfg.head_dim
+        cache["k"] = jnp.zeros((n_scan, batch_size, slots, kh, hd), dt)
+        cache["v"] = jnp.zeros((n_scan, batch_size, slots, kh, hd), dt)
+    for i in range(cfg.first_k_dense):
+        kh, hd = cfg.num_kv_heads, cfg.head_dim
+        if cfg.use_mla:
+            cache[f"dense{i}_c"] = jnp.zeros((batch_size, slots, cfg.kv_lora_rank), dt)
+            cache[f"dense{i}_kr"] = jnp.zeros((batch_size, slots, cfg.rope_head_dim), dt)
+        else:
+            cache[f"dense{i}_k"] = jnp.zeros((batch_size, slots, kh, hd), dt)
+            cache[f"dense{i}_v"] = jnp.zeros((batch_size, slots, kh, hd), dt)
+    return cache
+
+
+def _cache_pair_names(cfg):
+    return ("c", "kr") if cfg.use_mla else ("k", "v")
+
+
+def lm_prefill(params, cfg, batch, cache, *, chunk: int = 512):
+    """Run the full prompt, fill the cache.  Returns (last_logits, cache)."""
+    kind = _kind(cfg)
+    s = (batch["tokens"].shape[1] + (batch["embeds"].shape[1]
+                                     if cfg.embeds_input else 0))
+    logits, _, (kvs, dense_kvs) = lm_forward(params, cfg, batch,
+                                             collect_cache=True, chunk=chunk)
+    cache = dict(cache)
+    if kind == "ssm":
+        cache["ssm"], cache["conv"] = kvs
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+        return logits[:, -1:], cache
+    a, b_ = _cache_pair_names(cfg)
+    for i, (da, db) in dense_kvs.items():
+        cache[f"dense{i}_{a}"] = jax.lax.dynamic_update_slice(
+            cache[f"dense{i}_{a}"], da.astype(cache[f"dense{i}_{a}"].dtype),
+            (0, 0) + (0,) * (da.ndim - 2))
+        cache[f"dense{i}_{b_}"] = jax.lax.dynamic_update_slice(
+            cache[f"dense{i}_{b_}"], db.astype(cache[f"dense{i}_{b_}"].dtype),
+            (0, 0) + (0,) * (db.ndim - 2))
+    ka, kb = kvs
+    slots = cache[a].shape[2]
+    if cfg.sliding_window and s > slots:
+        # keep the last `slots` positions, rolled so slot = pos % slots
+        ka, kb = ka[:, :, -slots:], kb[:, :, -slots:]
+        start = s - slots
+        idx = (start + jnp.arange(slots)) % slots
+        inv = jnp.argsort(idx)
+        ka, kb = ka[:, :, inv], kb[:, :, inv]
+        cache["slot_pos"] = (start + jnp.arange(slots))[inv]
+        cache[a] = ka.astype(cache[a].dtype)
+        cache[b_] = kb.astype(cache[b_].dtype)
+    else:
+        cache[a] = jax.lax.dynamic_update_slice(
+            cache[a], ka.astype(cache[a].dtype), (0, 0, 0) + (0,) * (cache[a].ndim - 3))
+        cache[b_] = jax.lax.dynamic_update_slice(
+            cache[b_], kb.astype(cache[b_].dtype), (0, 0, 0) + (0,) * (cache[b_].ndim - 3))
+        cache["slot_pos"] = jnp.where(jnp.arange(cache["slot_pos"].shape[0]) < s,
+                                      jnp.arange(cache["slot_pos"].shape[0]),
+                                      -1).astype(jnp.int32)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits[:, -1:], cache
+
+
+def lm_decode_step(params, cfg, cache, tokens):
+    """tokens (B,1) -> (logits (B,1,V) f32, updated cache)."""
+    kind = _kind(cfg)
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], tokens)
+    cache = dict(cache)
+
+    if kind != "ssm":
+        slots = cache["slot_pos"].shape[0]
+        slot = pos % slots if cfg.sliding_window else pos
+        slot_pos = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+        cache["slot_pos"] = slot_pos
+        for i in range(cfg.first_k_dense):
+            a, b_ = _cache_pair_names(cfg)
+            lc = (cache[f"dense{i}_{a}"], cache[f"dense{i}_{b_}"])
+            x, new = _layer_decode(params[f"dense{i}"], cfg, x, lc, slot_pos,
+                                   pos, "dense")
+            cache[f"dense{i}_{a}"], cache[f"dense{i}_{b_}"] = new
+        a, b_ = _cache_pair_names(cfg)
+        xs = (params["layers"], cache[a], cache[b_])
+
+        def body(xc, layer_in):
+            lp, lk, lv = layer_in
+            xo, new = _layer_decode(lp, cfg, xc, (lk, lv), slot_pos, pos, kind)
+            return xo, new
+
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        cache[a], cache[b_] = nk, nv
+    else:
+        xs = (params["layers"], cache["ssm"], cache["conv"])
+
+        def body(xc, layer_in):
+            lp, ls, lc = layer_in
+            xo, new = _layer_decode(lp, cfg, xc, (ls, lc), None, pos, kind)
+            return xo, new
+
+        x, (ns, ncv) = jax.lax.scan(body, x, xs)
+        cache["ssm"], cache["conv"] = ns, ncv
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings)
+    cache["pos"] = pos + 1
+    return logits, cache

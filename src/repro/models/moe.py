@@ -1,0 +1,129 @@
+"""Mixture-of-Experts with sort-based capacity dispatch (GShard-style
+capacity, Megablocks-style sorted grouping — TPU-friendly static shapes).
+
+Expert GEMMs are batched (E, C, d) x (E, d, ff) einsums; with 64-160
+experts the per-expert token count C is small — exactly the tall-and-
+skinny regime, which is why the paper's technique is first-class here
+(see DESIGN.md §4).  Experts shard over the TP axis ('experts' logical
+axis); the skinny capacity dim C is never sharded (the no-shard rule).
+
+Dispatch is HIERARCHICAL (per data-shard groups): scatters/sorts run
+per-group with G = |dp axes|, so SPMD keeps them fully local to each
+device, and the only cross-device traffic is the (G, E, C, d) buffer's
+data->model all-to-all.  The flat global-scatter formulation forced XLA
+to replicate an O(T*k) x d buffer and all-reduce it (~10^13 bytes/step
+for olmoe train_4k — EXPERIMENTS.md §Perf iteration A documents the
+before/after).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import silu
+from repro.models.param import ParamTree
+from repro.sharding.context import get_ctx, shard_act
+
+
+def init_moe(rng, cfg):
+    d, ff, e = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
+    pt = ParamTree(rng, cfg.dtype)
+    pt.dense("router", (d, e), ("embed", "experts"), dtype="float32")
+    pt.dense("w_gate", (e, d, ff), ("experts", "embed", "mlp"), fan_in=d)
+    pt.dense("w_up", (e, d, ff), ("experts", "embed", "mlp"), fan_in=d)
+    pt.dense("w_down", (e, ff, d), ("experts", "mlp", "embed"), fan_in=ff)
+    if cfg.num_shared_experts:
+        sff = ff * cfg.num_shared_experts
+        pt.dense("ws_gate", (d, sff), ("embed", "mlp"))
+        pt.dense("ws_up", (d, sff), ("embed", "mlp"))
+        pt.dense("ws_down", (sff, d), ("mlp", "embed"))
+    return pt.build()
+
+
+def _capacity(tokens: int, e: int, k: int, factor: float) -> int:
+    c = int(tokens * k * factor / e) + 1
+    return max(8, -(-c // 8) * 8)  # sublane-align the skinny dim
+
+
+def _dp_groups(t: int) -> int:
+    """Dispatch-group count = data-parallel shard count (1 off-mesh)."""
+    ctx = get_ctx()
+    if ctx is None:
+        return 1
+    from repro.sharding.rules import axis_size
+    dp = tuple(a for a in ctx.opts.dp_axes if a in ctx.mesh.shape)
+    if not dp:
+        return 1
+    n = axis_size(ctx.mesh, dp)
+    return n if n > 1 and t % n == 0 and t >= n else 1
+
+
+def moe_apply(p, cfg, x, *, capacity_factor: float = 0.0):
+    """x: (B, S, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.experts_per_token
+    capacity_factor = capacity_factor or cfg.capacity_factor
+    g = _dp_groups(t)
+    tg = t // g
+    cap = _capacity(tg, e, k, capacity_factor)
+
+    xg = x.reshape(g, tg, d)
+    xg = shard_act(xg, "batch", None, "embed")
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # (g, tg, E) f32
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (g, tg, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- per-group sort-based dispatch (vmapped over groups) -----------
+    def dispatch(xf, ef, wf):
+        """xf (tg,d)  ef (tg,k)  wf (tg,k)."""
+        flat_e = ef.reshape(-1)                              # (tg*k,)
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = flat_e[order]
+        rank = jnp.arange(tg * k) - jnp.searchsorted(e_sorted, e_sorted,
+                                                     side="left")
+        keep = rank < cap
+        slot = jnp.where(keep, e_sorted * cap + rank, e * cap)
+        tok = order // k
+        buf = jnp.zeros((e * cap + 1, d), x.dtype)
+        buf = buf.at[slot].set(jnp.where(keep[:, None], xf[tok], 0))
+        return buf[:-1], slot, tok, keep, wf.reshape(-1)[order]
+
+    buf, slot, tok, keep, w_sorted = jax.vmap(dispatch)(xg, top_e, top_p)
+    buf = buf.reshape(g, e, cap, d)
+    # the data->model all-to-all happens HERE (G stays on dp, E moves to tp)
+    buf = shard_act(buf, "batch", "experts", None, "embed")
+
+    # ---- expert computation (batched TSMM-shaped GEMMs) ----------------
+    h = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    h2 = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = silu(h) * h2
+    h = shard_act(h, "batch", "experts", None, "mlp")
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = shard_act(y, "batch", "experts", None, "embed")
+
+    # ---- combine (per group, local again after the reverse all-to-all) --
+    def combine(yf, slot_, tok_, keep_, ws):
+        flat = yf.reshape(e * cap, d)
+        gath = jnp.where(keep_[:, None],
+                         flat[jnp.clip(slot_, 0, e * cap - 1)], 0)
+        return jnp.zeros((tg, d), x.dtype).at[tok_].add(
+            gath * ws[:, None].astype(x.dtype))
+
+    out = jax.vmap(combine)(y, slot, tok, keep, w_sorted)
+    out = shard_act(out, "batch", None, "embed").reshape(b, s, d)
+
+    xf_all = x.reshape(t, d)
+    if cfg.num_shared_experts:
+        hs = silu(jnp.dot(xf_all, p["ws_gate"])) * jnp.dot(xf_all, p["ws_up"])
+        out = out + jnp.dot(hs, p["ws_down"]).reshape(b, s, d)
+
+    # ---- load-balance aux loss (Switch/GShard form) ---------------------
+    me = probs.reshape(t, e).mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    return out, aux

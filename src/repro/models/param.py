@@ -1,0 +1,139 @@
+"""Parameter creation + logical-axis bookkeeping.
+
+Every parameter leaf is created through :func:`make_param` with an explicit
+tuple of *logical axis names*.  Sharding is derived later by
+``repro.sharding.rules.pspec_for`` from those names — model code never
+mentions mesh axes directly, so the same model runs on any mesh (single-pod
+16x16, multi-pod 2x16x16, a 4-device CI mesh, ...).
+
+Logical names used across the zoo:
+
+  batch, seq          activations
+  embed               d_model dims
+  qheads / kvheads    attention head dims (fused with head_dim)
+  headdim             per-head feature dim
+  mlp                 FFN hidden
+  vocab               embedding table rows / logits
+  experts             routed expert dim
+  lora                MLA low-rank dims
+  ssm_inner / ssm_heads / state / conv  mamba dims
+  layers / groups     stacked-scan leading dims (never sharded)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+# A parallel tree of logical-axis tuples is threaded alongside params.
+# ``init`` functions return ``(params, axes)`` with identical structure.
+
+
+def _normal(rng, shape, dtype, scale):
+    return (scale * jax.random.normal(rng, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def dense_init(rng, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return _normal(rng, shape, dtype, 1.0 / math.sqrt(max(fan_in, 1)))
+
+
+def embed_init(rng, shape, dtype):
+    return _normal(rng, shape, dtype, 0.02)
+
+
+class ParamTree:
+    """Collects ``(value, logical_axes)`` pairs under string paths.
+
+    Used as::
+
+        pt = ParamTree(rng, dtype)
+        pt.dense("wq", (d, H * hd), ("embed", "qheads"))
+        ...
+        params, axes = pt.build()
+
+    Each call derives a per-leaf RNG with ``fold_in`` over the insertion
+    index so parameter values are independent of insertion order changes
+    elsewhere in the tree.
+    """
+
+    def __init__(self, rng, dtype):
+        self.rng = rng
+        self.dtype = dtype
+        self._params: dict[str, Any] = {}
+        self._axes: dict[str, Any] = {}
+        self._n = 0
+
+    def _next_rng(self):
+        self._n += 1
+        return jax.random.fold_in(self.rng, self._n)
+
+    def add(self, name: str, value, axes: tuple):
+        assert name not in self._params, f"duplicate param {name}"
+        assert len(axes) == value.ndim, (name, axes, value.shape)
+        self._params[name] = value
+        self._axes[name] = axes
+        return value
+
+    def dense(self, name, shape, axes, fan_in=None, dtype=None):
+        return self.add(
+            name, dense_init(self._next_rng(), shape, dtype or self.dtype, fan_in), axes
+        )
+
+    def embed(self, name, shape, axes, dtype=None):
+        return self.add(name, embed_init(self._next_rng(), shape, dtype or self.dtype), axes)
+
+    def zeros(self, name, shape, axes, dtype=None):
+        return self.add(name, jnp.zeros(shape, dtype or self.dtype), axes)
+
+    def ones(self, name, shape, axes, dtype=None):
+        return self.add(name, jnp.ones(shape, dtype or self.dtype), axes)
+
+    def value(self, name, value, axes):
+        return self.add(name, value, axes)
+
+    def sub(self, name: str, params_axes: tuple):
+        """Attach a ``(params, axes)`` pair from a nested init call."""
+        params, axes = params_axes
+        self._params[name] = params
+        self._axes[name] = axes
+        return params
+
+    def build(self):
+        return self._params, self._axes
+
+
+def stack_inits(init_fn: Callable, rng, n: int, stacked_axis: str = "layers"):
+    """Initialize ``n`` structurally-identical layers and stack their params
+    along a new leading axis (for ``lax.scan`` over layers).
+
+    ``init_fn(rng) -> (params, axes)``.  Axes get ``stacked_axis`` prepended.
+    """
+    rngs = [jax.random.fold_in(rng, i) for i in range(n)]
+    trees = [init_fn(r) for r in rngs]
+    params0, axes0 = trees[0]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *[t[0] for t in trees])
+    axes = jax.tree.map(
+        lambda a: (stacked_axis,) + a,
+        axes0,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(s, (str, type(None))) for s in x),
+    )
+    return stacked, axes
+
+
+def is_axes_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(s, (str, type(None))) for s in x)
+
+
+def tree_paths(tree, prefix=()):
+    """Flatten a nested dict tree into (path, leaf) pairs."""
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.extend(tree_paths(v, prefix + (k,)))
+    else:
+        out.append((prefix, tree))
+    return out

@@ -1,0 +1,85 @@
+"""Unified model interface: one ModelDef per architecture family.
+
+Every model exposes the same five functions so the train loop, serving
+engine, and dry-run launcher are architecture-agnostic:
+
+    init(rng)                      -> (params, logical_axes)
+    forward(params, batch)         -> (logits_f32, aux_loss)
+    init_cache(batch, max_len)     -> zeroed cache pytree
+    prefill(params, batch, cache)  -> (last_logits, cache)
+    decode_step(params, cache, tk) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import lm as LM
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable          # (params, batch) -> (logits, aux)
+    init_cache: Callable       # (batch_size, max_len) -> cache
+    prefill: Callable          # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable      # (params, cache, tokens) -> (logits, cache)
+
+
+def build_model(cfg: ModelConfig) -> ModelDef:
+    if cfg.family == "encdec":
+        return ModelDef(
+            cfg=cfg,
+            init=lambda rng: ED.init_encdec(cfg, rng),
+            forward=lambda p, b: ED.encdec_forward(p, cfg, b)[:2],
+            init_cache=lambda bs, ml: ED.encdec_init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: ED.encdec_prefill(p, cfg, b, c),
+            decode_step=lambda p, c, t: ED.encdec_decode_step(p, cfg, c, t),
+        )
+    if cfg.family == "hybrid":
+        return ModelDef(
+            cfg=cfg,
+            init=lambda rng: HY.init_hybrid(cfg, rng),
+            forward=lambda p, b: HY.hybrid_forward(p, cfg, b)[:2],
+            init_cache=lambda bs, ml: HY.hybrid_init_cache(cfg, bs, ml),
+            prefill=lambda p, b, c: HY.hybrid_prefill(p, cfg, b, c),
+            decode_step=lambda p, c, t: HY.hybrid_decode_step(p, cfg, c, t),
+        )
+    # dense / moe / ssm / vlm share the LM assembly
+    return ModelDef(
+        cfg=cfg,
+        init=lambda rng: LM.init_lm(cfg, rng),
+        forward=lambda p, b: LM.lm_forward(p, cfg, b)[:2],
+        init_cache=lambda bs, ml: LM.init_cache(cfg, bs, ml),
+        prefill=lambda p, b, c: LM.lm_prefill(p, cfg, b, c),
+        decode_step=lambda p, c, t: LM.lm_decode_step(p, cfg, c, t),
+    )
+
+
+def param_count(model: ModelDef) -> int:
+    """Exact param count via shape-only evaluation (no allocation)."""
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))[0])
+    return sum(int(x.size) for x in jax.tree.leaves(shapes))
+
+
+def active_param_count(model: ModelDef) -> int:
+    """Params touched per token (MoE: shared + top-k of routed)."""
+    cfg = model.cfg
+    total = param_count(model)
+    if not cfg.num_experts:
+        return total
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))[0])
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if any(k in ("w_gate", "w_up", "w_down") for k in keys) and leaf.ndim == 4:
+            routed += int(leaf.size)
+    active_routed = routed * cfg.experts_per_token // cfg.num_experts
+    return total - routed + active_routed

@@ -1,0 +1,108 @@
+"""Ambient sharding context for activation constraints.
+
+Model code calls ``shard_act(x, "batch", "seq", "embed")`` with *logical*
+names; the ambient :class:`ShardCtx` (set by the train/serve step builders)
+resolves them to mesh axes and applies ``with_sharding_constraint``.  With no
+ctx set (unit tests, single-device smoke runs) it is a no-op, so the model
+zoo runs unmodified on one CPU device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import ShardingOptions, axis_size
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_ctx", default=None)
+
+# logical activation axis -> role
+_TP_ACT = {"heads", "kvheads", "mlp", "vocab", "experts", "ssm_inner", "ssm_heads"}
+_DP_ACT = {"batch"}
+_SP_ACT = {"seq"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    opts: ShardingOptions
+
+    def spec_for(self, names: tuple, shape: tuple) -> P:
+        assign: list = [None] * len(names)
+        used: set = set()
+
+        def try_assign(i, cand, dim):
+            cand = tuple(a for a in cand if a not in used)
+            if not cand:
+                return
+            n = axis_size(self.mesh, cand)
+            if n > 1 and dim % n == 0 and dim >= n:
+                assign[i] = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+
+        dp_axes = tuple(a for a in self.opts.dp_axes if a in self.mesh.shape)
+        # pass 1: primary assignments (batch -> dp, tp-logical -> model)
+        for i, (name, dim) in enumerate(zip(names, shape)):
+            if name == "cache_batch":
+                try_assign(i, dp_axes, dim)        # caches always dp-shard
+                if assign[i] is None:              # multi-pod: axis subsets
+                    for a in dp_axes:
+                        try_assign(i, (a,), dim)
+            elif name == "kblocks" and self.opts.serve_2d_tp:
+                try_assign(i, dp_axes, dim)        # 2D-TP contraction dim
+                if assign[i] is None:
+                    for a in dp_axes:
+                        try_assign(i, (a,), dim)
+            elif name in _DP_ACT:
+                if not self.opts.serve_2d_tp:      # 2D-TP: batch replicated
+                    try_assign(i, dp_axes, dim)
+            elif name in _TP_ACT:
+                try_assign(i, (self.opts.tp_axis,), dim)
+            elif name in _SP_ACT and self.opts.sequence_parallel:
+                # sequence parallelism: 'model' (Megatron-SP: residual/norm
+                # activations shard seq over the TP axis) or truthy (dp)
+                if self.opts.sequence_parallel == "model":
+                    cand = (self.opts.tp_axis,)
+                else:
+                    cand = tuple(a for a in self.opts.dp_axes
+                                 if a in self.mesh.shape)
+                try_assign(i, cand, dim)
+        # pass 2: cache_seq soaks up whatever is left (model first — the
+        # long-KV fallback when kv_heads < tp; then unused dp axes)
+        for i, (name, dim) in enumerate(zip(names, shape)):
+            if name == "cache_seq" and assign[i] is None:
+                try_assign(i, (self.opts.tp_axis,), dim)
+                if assign[i] is None:
+                    for a in self.opts.dp_axes:
+                        if a in self.mesh.shape:
+                            try_assign(i, (a,), dim)
+        return P(*assign)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], opts: Optional[ShardingOptions] = None):
+    tok = _CTX.set(ShardCtx(mesh, opts or ShardingOptions()) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def get_ctx() -> Optional[ShardCtx]:
+    return _CTX.get()
+
+
+def shard_act(x, *names: str):
+    """Constrain activation ``x`` whose dims carry logical ``names``."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    spec = ctx.spec_for(names, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

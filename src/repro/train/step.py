@@ -1,0 +1,122 @@
+"""Train step: masked CE loss, microbatch gradient accumulation, remat-
+aware, mesh-agnostic (sharding comes from in_shardings + shard_act
+constraints inside the model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import OptConfig, apply_updates, init_opt_state
+
+
+def cross_entropy(logits, labels):
+    """Masked CE.  labels == -100 are ignored (vlm image positions)."""
+    mask = (labels != -100)
+    lab = jnp.clip(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ce = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1)
+    return (ce * mask).sum() / denom
+
+
+def make_loss_fn(model, axes=None):
+    """Loss as a function of the bf16 COMPUTE params.
+
+    The cast from fp32 masters happens OUTSIDE (see make_train_step):
+    differentiating w.r.t. the bf16 copy keeps every weight gradient —
+    and therefore every FSDP reduce/gather in the backward — in bf16,
+    halving grad-path collective bytes (§Perf B4').  Grads are upcast to
+    f32 only at the accumulator/optimizer boundary (standard mixed
+    precision; the f32 masters absorb the update exactly as before).
+    """
+
+    def loss_fn(compute_params, batch):
+        logits, aux = model.forward(compute_params, batch)
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + aux, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def cast_params_for_compute(params, cfg, axes=None):
+    compute = jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16)
+        if (hasattr(p, "dtype") and p.dtype == jnp.float32 and p.ndim >= 2
+            and cfg.dtype == "bfloat16") else p, params)
+    # pin the bf16 copy to the SAME (FSDP/TP) layout as the fp32 masters:
+    # cast-BEFORE-gather, so forward weight all-gathers move bf16.
+    return _constrain_like_params(compute, axes)
+
+
+def _constrain_like_params(compute, axes):
+    from repro.sharding.context import get_ctx
+    ctx = get_ctx()
+    if ctx is None or axes is None:
+        return compute
+    from jax.sharding import NamedSharding
+    from repro.models.param import is_axes_leaf
+    from repro.sharding.rules import pspec_for
+
+    def one(ax, leaf):
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        spec = pspec_for(ax, leaf.shape, ctx.mesh, ctx.opts)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(ctx.mesh, spec))
+
+    return jax.tree.map(one, axes, compute, is_leaf=is_axes_leaf)
+
+
+def init_train_state(model, ocfg: OptConfig, rng):
+    params, axes = model.init(rng)
+    # fp32 masters for matrices; small vectors stay as initialized
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return {"params": params, "opt": init_opt_state(ocfg, params),
+            "step": jnp.zeros((), jnp.int32)}, axes
+
+
+def make_train_step(model, ocfg: OptConfig, microbatch: int = 0, axes=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatch`` k > 1 scans over k micro-slices of the global batch,
+    accumulating fp32 grads (grad-accumulation for the 100B+ cells).
+    ``axes``: logical-axes tree enabling the cast-before-gather pin (B4).
+    """
+    loss_fn = make_loss_fn(model, axes)
+    k = microbatch or model.cfg.microbatch
+
+    def train_step(state, batch):
+        params = state["params"]
+        compute = cast_params_for_compute(params, model.cfg, axes)
+        gfn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        # shapes are static at trace time: degrade the accumulation factor
+        # when the global batch doesn't divide (reduced-config smoke runs)
+        b = jax.tree.leaves(batch)[0].shape[0]
+        kk = k if (k > 1 and b % k == 0 and b >= k) else 1
+        if kk > 1:
+            def micro(acc, mb):
+                (l, m), g = gfn(compute, mb)            # grads in bf16
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / kk, acc, g)
+                return acc, m
+            mbatch = jax.tree.map(
+                lambda x: x.reshape(kk, x.shape[0] // kk, *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(micro, zeros, mbatch)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        else:
+            (l, metrics), grads = gfn(compute, batch)
+
+        new_params, opt, stats = apply_updates(ocfg, params, grads, state["opt"])
+        metrics.update(stats)
+        return ({"params": new_params, "opt": opt, "step": state["step"] + 1},
+                metrics)
+
+    return train_step

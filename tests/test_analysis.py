@@ -1,0 +1,93 @@
+"""Tests for the roofline analysis machinery: scan-aware jaxpr costs and
+trip-count-weighted HLO collective parsing — the §Roofline number sources."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.jaxpr_cost import analyze_fn
+
+
+def test_dot_flops_exact():
+    f = lambda a, b: jnp.dot(a, b)
+    c = analyze_fn(f, jax.ShapeDtypeStruct((128, 256), jnp.float32),
+                   jax.ShapeDtypeStruct((256, 64), jnp.float32))
+    assert c.flops == 2 * 128 * 256 * 64
+    assert c.dot_bytes == (128 * 256 + 256 * 64 + 128 * 64) * 4
+
+
+def test_scan_multiplies_flops():
+    def g(x):
+        def body(c, _):
+            return jnp.dot(c, c), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    c = analyze_fn(g, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    assert c.flops == 7 * 2 * 64 ** 3
+
+
+def test_nested_scan_and_remat():
+    def g(w, x):
+        @jax.checkpoint
+        def layer(h, _):
+            return jnp.tanh(h @ w), None
+
+        def outer(h, _):
+            h, _ = jax.lax.scan(layer, h, None, length=3)
+            return h, None
+
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    c = analyze_fn(g, w, x)
+    assert c.dot_flops == 15 * 2 * 8 * 32 * 32       # 5 x 3 layers
+    # grad triples-ish the dots (fwd + recompute + 2 bwd dots)
+    cg = analyze_fn(jax.grad(lambda w_, x_: g(w_, x_)), w, x)
+    assert cg.dot_flops >= 3 * c.dot_flops
+
+
+def test_batched_dot_general():
+    f = lambda a, b: jnp.einsum("bij,bjk->bik", a, b)
+    c = analyze_fn(f, jax.ShapeDtypeStruct((4, 16, 32), jnp.float32),
+                   jax.ShapeDtypeStruct((4, 32, 8), jnp.float32))
+    assert c.flops == 2 * 4 * 16 * 32 * 8
+
+
+def test_hlo_collective_parser_units():
+    from repro.analysis.hlo_collectives import _factor, _op_bytes
+    line = ("%all-reduce = f32[64,256]{1,0} all-reduce(%dot), channel_id=1, "
+            "replica_groups=[2,4]<=[8], use_global_device_ids=true")
+    op, size, n = _op_bytes(line)
+    assert op == "all-reduce" and size == 64 * 256 * 4 and n == 4
+    assert _factor("all-reduce", 4) == 2 * 3 / 4
+    assert _factor("all-gather", 16) == 15 / 16
+    assert _factor("collective-permute", 2) == 1.0
+    assert _factor("all-reduce", 1) == 0.0
+
+
+def test_serve_2d_tp_spec_logic():
+    """Unit test of the C2 sharding rules (no compile)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.sharding.context import ShardCtx
+    from repro.sharding.rules import ShardingOptions
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = Mesh(devs, ("data", "model"))
+
+    normal = ShardCtx(mesh, ShardingOptions())
+    tp2d = ShardCtx(mesh, ShardingOptions(serve_2d_tp=True))
+
+    # compute-path batch: sharded normally, replicated under 2D-TP
+    assert normal.spec_for(("batch", None), (128, 512)) == P("data", None)
+    assert tp2d.spec_for(("batch", None), (128, 512)) == P(None, None)
+    # kblocks: only assigned under 2D-TP
+    assert normal.spec_for(("batch", "kblocks", None), (128, 16, 64)
+                           ) == P("data", None, None)
+    assert tp2d.spec_for(("batch", "kblocks", None), (128, 16, 64)
+                         ) == P(None, "data", None)
+    # caches keep dp batch sharding in BOTH modes
+    assert tp2d.spec_for(("layers", "cache_batch", "cache_seq", "kvheads",
+                          "headdim"), (4, 128, 4096, 8, 128)
+                         )[1] == "data"

@@ -1,0 +1,107 @@
+"""Attention correctness: chunked online-softmax vs naive reference,
+sliding windows, GQA grouping, MLA absorbed decode vs explicit forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+RNG = np.random.default_rng(7)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0):
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, d)
+    s = np.einsum("bqhgd,bkhd->bhgqk", np.asarray(qg, np.float32),
+                  np.asarray(k, np.float32)) / np.sqrt(d)
+    qpos = np.arange(sq)[:, None]
+    kpos = np.arange(k.shape[1])[None, :]
+    mask = np.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o = np.einsum("bhgqk,bkhd->bhgqd", p, np.asarray(v, np.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+
+
+@pytest.mark.parametrize("sq,sk,h,kh,d,chunk", [
+    (32, 32, 4, 4, 16, 8),
+    (64, 64, 8, 2, 32, 16),     # GQA g=4
+    (48, 48, 6, 3, 8, 16),      # non-pow2
+    (32, 32, 4, 1, 16, 32),     # MQA, single chunk
+])
+@pytest.mark.parametrize("window", [0, 8])
+def test_chunked_vs_naive(sq, sk, h, kh, d, chunk, window):
+    q = jnp.asarray(RNG.standard_normal((2, sq, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, sk, kh, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, sk, kh, d)), jnp.float32)
+    got = A.chunked_attention(q, k, v, causal=True, window=window,
+                              chunk=chunk)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_non_causal_cross():
+    q = jnp.asarray(RNG.standard_normal((2, 32, 4, 16)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 48, 4, 16)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 48, 4, 16)), jnp.float32)
+    got = A.chunked_attention(q, k, v, causal=False, chunk=16)
+    want = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_last_row():
+    """decode_attention over a filled cache == last row of full attention."""
+    b, s, h, kh, d = 2, 24, 4, 2, 16
+    q = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kh, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kh, d)), jnp.float32)
+    full = A.chunked_attention(q, k, v, causal=True, chunk=8)
+    got = A.decode_attention(q[:, -1:], k, v, jnp.arange(s), s - 1)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mla_decode_matches_forward():
+    from repro.configs import get_reduced_config
+    cfg = get_reduced_config("deepseek_v2_236b")
+    p, _ = A.init_mla(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda x: x.astype(jnp.float32), p)
+    b, s = 2, 12
+    x = jnp.asarray(0.1 * RNG.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    out_full, (c_kv, k_rope) = A.mla_forward(p, cfg, x, chunk=4)
+
+    cache_c = jnp.zeros((b, s, cfg.kv_lora_rank), jnp.float32)
+    cache_kr = jnp.zeros((b, s, cfg.rope_head_dim), jnp.float32)
+    cache_c = cache_c.at[:, : s - 1].set(c_kv[:, : s - 1])
+    cache_kr = cache_kr.at[:, : s - 1].set(k_rope[:, : s - 1])
+    out_step, _, _ = A.mla_decode(p, cfg, x[:, -1:], cache_c, cache_kr, s - 1)
+    np.testing.assert_allclose(np.asarray(out_step[:, 0]),
+                               np.asarray(out_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rope_rotation_invariant():
+    """RoPE: relative-position property <q_i, k_j> depends only on i-j."""
+    from repro.models.layers import apply_rope, rope_tables
+    d = 32
+    q = jnp.asarray(RNG.standard_normal((1, 1, 1, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 1, 1, d)), jnp.float32)
+
+    def dot_at(pi, pj):
+        cq, sq_ = rope_tables(jnp.asarray([pi]), d, 10000.0)
+        ck, sk_ = rope_tables(jnp.asarray([pj]), d, 10000.0)
+        qr = apply_rope(q, cq, sq_)
+        kr = apply_rope(k, ck, sk_)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-3
+    assert abs(dot_at(7, 7) - dot_at(0, 0)) < 1e-3

@@ -1,0 +1,30 @@
+"""Install-time stage: CLI problem enumeration + plan registry behaviour."""
+
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import registry
+from repro.core.install import serving_problems
+from repro.core.plan import is_tsmm
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_serving_problems_are_tsmm(arch):
+    probs = serving_problems(get_config(arch))
+    assert probs, arch
+    for p in probs:
+        assert is_tsmm(p.m, p.k, p.n)
+        assert p.skinny <= 256
+
+
+def test_registry_persists_across_clear(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans.json"))
+    registry.clear_memory()
+    from repro.core.autotuner import make_plan
+    from repro.core.plan import Problem
+    p1 = make_plan(Problem(8192, 4096, 16, "float32"))
+    registry.clear_memory()          # drop memory; file must survive
+    p2 = make_plan(Problem(8192, 4096, 16, "float32"))
+    assert p1 == p2
+    registry.clear_memory()

@@ -1,0 +1,91 @@
+"""Checkpoint manager + serving engine system tests."""
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs import get_reduced_config
+from repro.models.registry import build_model
+from repro.serve.engine import Engine, pack_tree_for_serving
+
+
+def test_ckpt_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    tree = {"a": jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16)},
+            "n": jnp.asarray(3, jnp.int32)}
+    for step in (1, 2, 3):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+    assert mgr.latest_step() == 3
+    assert sorted(mgr.all_steps()) == [2, 3]          # keep=2 GC'd step 1
+    got = mgr.restore(3, jax.eval_shape(lambda: tree))
+    want = jax.tree.map(lambda x: x + 3, tree)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_ckpt_async_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3, async_save=True)
+    tree = {"w": jnp.full((64, 64), 2.0)}
+    mgr.save(10, tree)
+    mgr.wait()
+    step, got = mgr.restore_latest(jax.eval_shape(lambda: tree))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+def test_ckpt_ignores_partial_tmp(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(5, {"x": jnp.ones(3)})
+    # a crashed writer leaves a tmp dir behind — must be invisible
+    (tmp_path / "step_000000000009.tmp.123.456").mkdir()
+    assert mgr.latest_step() == 5
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=512, d_ff=1024, num_layers=2, vocab_size=1024,
+        num_heads=8, num_kv_heads=8, head_dim=64)
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    return model, params, axes
+
+
+def test_pack_tree_selects_big_weights(small_model):
+    model, params, axes = small_model
+    packed, report = pack_tree_for_serving(params, axes, batch_m=4)
+    assert len(report) >= 4            # attn + mlp + head weights packed
+    assert all("tok" not in k for k in report)   # embedding never packed
+
+
+def test_packed_serving_matches_dense(small_model):
+    model, params, axes = small_model
+    batch = {"tokens": (jnp.arange(4 * 12).reshape(4, 12)
+                        % model.cfg.vocab_size).astype(jnp.int32)}
+    packed, _ = pack_tree_for_serving(params, axes, batch_m=4)
+    cache = model.init_cache(4, 32)
+    l_dense, c1 = model.prefill(params, batch, cache)
+    l_packed, c2 = model.prefill(packed, batch, cache)
+    np.testing.assert_allclose(np.asarray(l_packed), np.asarray(l_dense),
+                               rtol=5e-2, atol=5e-1)
+    t = jnp.zeros((4, 1), jnp.int32)
+    s_dense, _ = model.decode_step(params, c1, t)
+    s_packed, _ = model.decode_step(packed, c2, t)
+    np.testing.assert_allclose(np.asarray(s_packed), np.asarray(s_dense),
+                               rtol=5e-2, atol=5e-1)
+
+
+def test_engine_generates(small_model):
+    model, params, axes = small_model
+    eng = Engine(model, params, axes, max_len=48, batch_size=4, prepack=True)
+    batch = {"tokens": (jnp.arange(4 * 12).reshape(4, 12)
+                        % model.cfg.vocab_size).astype(jnp.int32)}
+    res = eng.generate(batch, steps=6)
+    assert res.tokens.shape == (4, 6)
+    assert len(eng.pack_report) > 0
+    assert bool(jnp.isfinite(res.logits_last.astype(jnp.float32)).all())

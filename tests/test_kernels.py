@@ -1,0 +1,128 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) and the blocked-XLA
+fallback vs the pure-jnp oracle, across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+TALL_CASES = [
+    # (M, K, N, bm, bk)
+    (256, 256, 8, 128, 128),
+    (300, 520, 17, 128, 256),      # ragged everything
+    (1024, 512, 64, 256, 128),
+    (512, 1024, 240, 512, 512),    # paper's largest skinny width
+    (128, 128, 1, 128, 128),       # N=1 GEMV edge
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,bm,bk", TALL_CASES)
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_tsmm_tall_a(m, k, n, bm, bk, dtype, impl):
+    a, b = _mk((m, k), dtype), _mk((k, n), dtype)
+    want = ref.tsmm_ref(a, b)
+    got = ops.tsmm(a, b, bm=bm, bk=bk, impl=impl)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,bm,bk", TALL_CASES)
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_tsmm_packed_a(m, k, n, bm, bk, dtype, impl):
+    a, b = _mk((m, k), dtype), _mk((k, n), dtype)
+    ap = ops.pack_blocks(a, bm, bk)
+    want = ref.tsmm_packed_ref(ap, b, m)
+    got = ops.tsmm_packed(ap, b, impl=impl)[:m]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want[:m], np.float32), **_tol(dtype))
+
+
+SKINNY_CASES = [
+    # (m, K, N, bk, bn)
+    (1, 512, 1024, 256, 128),
+    (8, 512, 1024, 128, 256),
+    (13, 768, 512, 256, 128),
+    (128, 1024, 2048, 512, 512),
+    (96, 640, 384, 128, 128),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu"])
+@pytest.mark.parametrize("m,k,n,bk,bn", SKINNY_CASES[:3])
+def test_tsmm_skinny_fused_epilogue(m, k, n, bk, bn, act, dtype):
+    x, w = _mk((m, k), dtype), _mk((k, n), dtype)
+    bias = _mk((n,), dtype)
+    wp = ops.pack_blocks(w, bk, bn)
+    want = ref.tsmm_ref(x, w, bias=bias, act=act)
+    got = ops.tsmm_skinny(x, wp, bias, act=act, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,bk,bn", SKINNY_CASES)
+@pytest.mark.parametrize("impl", ["pallas_interpret", "xla"])
+def test_tsmm_skinny_nobias(m, k, n, bk, bn, dtype, impl):
+    x, w = _mk((m, k), dtype), _mk((k, n), dtype)
+    wp = ops.pack_blocks(w, bk, bn)
+    want = ref.tsmm_ref(x, w)
+    got = ops.tsmm_skinny(x, wp, impl=impl)[:, :n]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_pack_unpack_roundtrip():
+    for (m, k, bm, bk) in [(256, 256, 128, 128), (300, 520, 128, 256),
+                           (65, 129, 64, 128)]:
+        a = _mk((m, k), jnp.float32)
+        ap = ops.pack_blocks(a, bm, bk)
+        back = ops.unpack_blocks(ap, m, k)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(a))
+
+
+def test_pack_folds_alpha():
+    a = _mk((128, 128), jnp.float32)
+    ap = ops.pack_blocks(a, 64, 128, alpha=2.5)
+    back = ops.unpack_blocks(ap, 128, 128)
+    np.testing.assert_allclose(np.asarray(back), 2.5 * np.asarray(a),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,bm,bk", [(256, 256, 128, 128),
+                                       (300, 520, 128, 256),
+                                       (64, 256, 8, 128)])
+def test_pack_kernel_matches_ref(m, k, bm, bk, dtype):
+    """On-device pre-pack kernel == the jnp pack oracle."""
+    a = _mk((m, k), dtype)
+    want = ops.pack_blocks(a, bm, bk)                        # jnp path
+    got = ops.pack_blocks(a, bm, bk, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_pack_kernel_alpha():
+    a = _mk((128, 256), jnp.float32)
+    got = ops.pack_blocks(a, 64, 128, alpha=3.0, impl="pallas_interpret")
+    back = ops.unpack_blocks(got, 128, 256)
+    np.testing.assert_allclose(np.asarray(back), 3.0 * np.asarray(a),
+                               rtol=1e-6)
