@@ -21,7 +21,7 @@ from typing import Optional
 
 from repro.core import registry
 from repro.core.hw import TPU_V5E, HwSpec
-from repro.core.plan import SKINNY_MAX, Plan, Problem, is_tsmm
+from repro.core.plan import SKINNY_MAX, Plan, PlanSet, Problem, is_tsmm
 from repro.core.vmem_model import feasible, predict
 
 log = logging.getLogger(__name__)
@@ -112,3 +112,35 @@ def plan_for_matmul(m: int, k: int, n: int, dtype: str = "bfloat16",
     if not is_tsmm(m, k, n):
         return None
     return make_plan(Problem(m, k, n, dtype, num_shards), **kw)
+
+
+def make_plan_set(
+    k: int,
+    n: int,
+    buckets: tuple,
+    dtype: str = "bfloat16",
+    num_shards: int = 1,
+    hw: HwSpec = TPU_V5E,
+    *,
+    measure: Optional[str] = None,
+    persist: bool = True,
+    impl: str = "auto",
+) -> PlanSet:
+    """Per-bucket plans for one (k, n) weight shape (DESIGN.md §7).
+
+    Each bucket m with a TSMM-shaped (m, k, n) gets its own Plan (cached
+    in / restored from the registry); non-TSMM buckets are skipped — at
+    runtime those fall back to plain GEMM.  With ``persist`` the set is
+    written back in ONE registry write, and only if a lookup missed (a
+    warm, all-hit call never rewrites the cache file).
+    """
+    misses_before = registry.stats()["misses"]
+    plans = {}
+    for m in buckets:
+        if not is_tsmm(m, k, n):
+            continue
+        plans[m] = make_plan(Problem(m, k, n, dtype, num_shards), hw,
+                             measure=measure, persist=False, impl=impl)
+    if persist and registry.stats()["misses"] > misses_before:
+        registry.flush()
+    return PlanSet(plans)

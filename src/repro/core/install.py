@@ -2,12 +2,14 @@
 once per machine/platform.
 
     PYTHONPATH=src python -m repro.core.install [--measure] [--archs a,b]
+                                                [--max-batch N]
 
 Pre-populates the persistent plan registry with execution plans for every
-TSMM-shaped matmul the model zoo's serving path will hit (decode batch
-sizes x each arch's projection shapes), so the runtime stage is a pure
-lookup.  With ``--measure`` the performance evaluator times the
-short-list (wall-clock; on TPU this times the Pallas kernels).
+TSMM-shaped matmul the model zoo's serving path will hit: every power-of-
+two batch bucket (1..max_batch, DESIGN.md §7) x each arch's projection
+shapes.  A subsequent Engine start is then registry lookups only — the
+runtime stage never tunes.  With ``--measure`` the performance evaluator
+times the short-list (wall-clock; on TPU this times the Pallas kernels).
 """
 
 from __future__ import annotations
@@ -16,15 +18,19 @@ import argparse
 import time
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core.autotuner import make_plan
-from repro.core.plan import Problem, is_tsmm
+from repro.core import registry
+from repro.core.autotuner import make_plan_set
+from repro.core.plan import Problem, buckets_for, is_tsmm
 from repro.core.registry import cache_path
 
-DECODE_BATCHES = (1, 8, 32, 128)
+# Serving batch buckets swept at install time (replaces the old fixed
+# DECODE_BATCHES tuple): every power of two up to the fleet's max batch.
+MAX_SERVE_BATCH = 128
+SERVE_BUCKETS = buckets_for(MAX_SERVE_BATCH)
 
 
-def serving_problems(cfg) -> list[Problem]:
-    """The (m, k, n) set the decode path hits for one architecture."""
+def serving_shapes(cfg) -> set:
+    """The (k, n) weight shapes the decode path hits for one arch."""
     d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     shapes = set()
     if h:
@@ -40,12 +46,32 @@ def serving_problems(cfg) -> list[Problem]:
         shapes |= {(d, cfg.q_lora_rank), (cfg.kv_lora_rank,
                                           h * (cfg.head_dim + cfg.v_head_dim))}
     shapes.add((d, cfg.vocab_size))
+    return shapes
+
+
+def serving_problems(cfg, buckets: tuple = SERVE_BUCKETS) -> list[Problem]:
+    """The (m, k, n) set the decode path hits for one architecture —
+    every bucket x every TSMM-shaped projection."""
+    shapes = sorted(serving_shapes(cfg))
     out = []
-    for b in DECODE_BATCHES:
+    for b in buckets:
         for (k, n) in shapes:
             if is_tsmm(b, k, n):
                 out.append(Problem(b, k, n, cfg.dtype))
     return out
+
+
+def install_arch(cfg, buckets: tuple = SERVE_BUCKETS, *,
+                 measure: bool = False) -> int:
+    """Sweep one arch's serving shapes over the buckets.  Plans land in
+    the in-memory registry; the caller flushes once (bulk write)."""
+    n_plans = 0
+    for (k, n) in sorted(serving_shapes(cfg)):
+        pset = make_plan_set(k, n, buckets, cfg.dtype,
+                             measure="wallclock" if measure else None,
+                             persist=False)
+        n_plans += len(pset.plans)
+    return n_plans
 
 
 def main():
@@ -53,21 +79,24 @@ def main():
     ap.add_argument("--measure", action="store_true",
                     help="wall-clock the short-list (evaluator stage)")
     ap.add_argument("--archs", default="")
+    ap.add_argument("--max-batch", type=int, default=MAX_SERVE_BATCH,
+                    help="largest serving batch; buckets are powers of two "
+                         "up to this")
     args = ap.parse_args()
     archs = ([a.strip() for a in args.archs.split(",") if a.strip()]
              or ARCH_IDS)
+    buckets = buckets_for(args.max_batch)
 
     t0 = time.time()
     n_plans = 0
     for arch in archs:
         cfg = get_config(arch)
-        probs = serving_problems(cfg)
-        for p in probs:
-            make_plan(p, measure="wallclock" if args.measure else None)
-            n_plans += 1
-        print(f"{arch:24s} {len(probs):3d} plans")
-    print(f"\ninstalled {n_plans} execution plans in {time.time()-t0:.1f}s "
-          f"-> {cache_path()}")
+        n = install_arch(cfg, buckets, measure=args.measure)
+        registry.flush()   # one write per arch: an interrupted sweep
+        n_plans += n       # (e.g. a killed --measure run) keeps its work
+        print(f"{arch:24s} {n:3d} plans")
+    print(f"\ninstalled {n_plans} execution plans over buckets {buckets} "
+          f"in {time.time()-t0:.1f}s -> {cache_path()}")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Optional
+from typing import Mapping, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,3 +94,67 @@ class Plan:
                 f"{self.bn}) grid={self.grid} impl={self.impl} "
                 f"prepack={self.prepack} t_c={self.t_compute:.2e}s "
                 f"t_m={self.t_memory:.2e}s by={self.chosen_by}]")
+
+
+# ---------------------------------------------------------------------------
+# Batch buckets + PlanSet (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+def buckets_for(max_batch: int) -> tuple:
+    """Power-of-two batch buckets 1..max_batch.
+
+    ``max_batch`` itself is always a bucket, so a full batch never pads."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: tuple) -> int:
+    """Smallest bucket >= n (the admission pad target)."""
+    for b in buckets:
+        if b >= n:
+            return b
+    raise ValueError(f"batch {n} exceeds largest bucket {buckets[-1]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSet:
+    """Per-bucket execution plans for one (k, n) weight shape.
+
+    The serving runtime is batch-adaptive: each power-of-two bucket m gets
+    its own Plan (the vmem working set and MXU occupancy both depend on m),
+    while the packed weight layout is shared across buckets (see
+    ``core.tsmm.prepack_for``).  Buckets whose (m, k, n) is not TSMM-shaped
+    are absent — callers fall back to plain GEMM for those.
+    """
+
+    plans: Mapping[int, Plan]
+
+    @property
+    def buckets(self) -> tuple:
+        return tuple(sorted(self.plans))
+
+    def for_batch(self, m: int) -> Optional[Plan]:
+        """Plan of the smallest bucket >= m (largest bucket if m exceeds
+        all, None if the set is empty)."""
+        bs = self.buckets
+        if not bs:
+            return None
+        for b in bs:
+            if b >= m:
+                return self.plans[b]
+        return self.plans[bs[-1]]
+
+    def to_json(self) -> dict:
+        return {str(m): p.to_json() for m, p in self.plans.items()}
+
+    @staticmethod
+    def from_json(d: dict) -> "PlanSet":
+        return PlanSet({int(m): Plan.from_json(p) for m, p in d.items()})

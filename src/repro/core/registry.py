@@ -23,6 +23,10 @@ from repro.core.plan import Plan
 _LOCK = threading.Lock()
 _MEM: dict[str, Plan] = {}
 _LOADED_FROM: Optional[Path] = None
+# lookup telemetry: a miss means the caller had to tune fresh.  After the
+# install stage has swept the serving buckets, an Engine start must be
+# all hits (asserted in tests/test_bucketed_serving.py).
+_STATS = {"hits": 0, "misses": 0}
 
 
 def cache_path() -> Path:
@@ -60,7 +64,25 @@ def get(problem_key: str) -> Optional[Plan]:
     with _LOCK:
         if _LOADED_FROM is None:
             _load_file()
-        return _MEM.get(_key(problem_key))
+        plan = _MEM.get(_key(problem_key))
+        _STATS["hits" if plan is not None else "misses"] += 1
+        return plan
+
+
+def _write_file() -> None:
+    """Single atomic write of the whole in-memory map (lock held)."""
+    path = cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    blob = {k: p.to_json() for k, p in _MEM.items()}
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(blob, f, indent=1)
+        os.replace(tmp, path)  # atomic on POSIX
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 def put(plan: Plan, persist: bool = True) -> None:
@@ -68,20 +90,29 @@ def put(plan: Plan, persist: bool = True) -> None:
         if _LOADED_FROM is None:
             _load_file()
         _MEM[_key(plan.problem.key())] = plan
-        if not persist:
-            return
-        path = cache_path()
-        path.parent.mkdir(parents=True, exist_ok=True)
-        blob = {k: p.to_json() for k, p in _MEM.items()}
-        fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(blob, f, indent=1)
-            os.replace(tmp, path)  # atomic on POSIX
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        if persist:
+            _write_file()
+
+
+def flush() -> None:
+    """Persist everything currently in memory (one atomic write) — the
+    bulk path for the install sweep and engine pre-pack, which insert
+    buckets x shapes x archs plans via put(persist=False) first; per-plan
+    writes would be O(n) rewrites of the whole cache."""
+    with _LOCK:
+        if _LOADED_FROM is None:
+            _load_file()
+        _write_file()
+
+
+def stats() -> dict:
+    with _LOCK:
+        return dict(_STATS)
+
+
+def reset_stats() -> None:
+    with _LOCK:
+        _STATS["hits"] = _STATS["misses"] = 0
 
 
 def clear_memory() -> None:
@@ -90,3 +121,4 @@ def clear_memory() -> None:
     with _LOCK:
         _MEM.clear()
         _LOADED_FROM = None
+        _STATS["hits"] = _STATS["misses"] = 0

@@ -28,9 +28,11 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core import registry
-from repro.core.autotuner import make_plan, plan_for_matmul
+from repro.core.autotuner import make_plan, make_plan_set, plan_for_matmul
+from repro.core.hw import TPU_V5E, HwSpec
 from repro.core.packing import PackedTensor, is_packed, pack
 from repro.core.plan import Plan, Problem, is_tsmm
+from repro.core.vmem_model import feasible, predict
 from repro.kernels import ops
 
 
@@ -89,9 +91,17 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
     return out.reshape(*lead, n)
 
 
-def prepack_for(m_skinny: int, w, *, num_shards: int = 1,
-                shard_divisors: tuple = (1, 1)) -> Optional[PackedTensor]:
+def prepack_for(m_skinny, w, *, num_shards: int = 1,
+                shard_divisors: tuple = (1, 1),
+                hw: HwSpec = TPU_V5E) -> Optional[PackedTensor]:
     """Plan + pack a weight for decode-time reuse.
+
+    ``m_skinny`` is one serving batch size or a tuple of batch buckets
+    (DESIGN.md §7).  With multiple buckets ONE packed layout serves every
+    bucket: the block shape is chosen from the intersection of conforming
+    blocks — (bk, bn) that divide the per-shard dims AND fit the VMEM
+    budget for every bucket's problem — ranked by the vmem model's
+    predicted time summed across buckets.
 
     ``shard_divisors`` = (row_shards, col_shards) the weight is distributed
     over; chosen blocks must divide the per-shard dims so packing commutes
@@ -99,27 +109,53 @@ def prepack_for(m_skinny: int, w, *, num_shards: int = 1,
     Returns None when no conforming block exists (caller keeps the plain
     weight; honest fallback, recorded by the caller).
     """
+    buckets = (m_skinny,) if isinstance(m_skinny, int) else tuple(m_skinny)
     k, n = int(w.shape[-2]), int(w.shape[-1])
     rs, cs = shard_divisors
     if k % rs or n % cs:
         return None
     ks, ns = k // rs, n // cs
-    plan = make_plan(Problem(m_skinny, ks, ns, str(w.dtype), num_shards))
-    bk = _largest_conforming(ks, plan.bk)
-    bn = _largest_conforming(ns, plan.bn)
-    if bk is None or bn is None:
+    # per-bucket plans (registry-backed: after the install sweep this is a
+    # pure lookup; on a cold registry the tuned plans stay in memory and
+    # the caller flushes once per tree, not once per leaf); buckets whose
+    # problem is not TSMM-shaped get an untuned Problem so feasibility is
+    # still enforced for them.
+    pset = make_plan_set(ks, ns, buckets, str(w.dtype), num_shards, hw,
+                         persist=False)
+    problems = [pset.plans[m].problem if m in pset.plans
+                else Problem(m, ks, ns, str(w.dtype), num_shards)
+                for m in buckets]
+    # the tuned plans bound the block search: no bucket wants blocks
+    # beyond its tuned (bk, bn), so the conforming search is capped at
+    # the largest tuned preference across buckets
+    caps = (max((pl.bk for pl in pset.plans.values()), default=None),
+            max((pl.bn for pl in pset.plans.values()), default=None))
+    chosen = _conforming_blocks(problems, ks, ns, hw, caps=caps)
+    if chosen is None:
         return None
-    return pack(w, bk, bn)
+    return pack(w, *chosen)
 
 
-def _largest_conforming(dim: int, cap: int) -> Optional[int]:
-    """Largest multiple of 128 that divides ``dim`` and is <= cap."""
-    best = None
-    d = 128
-    while d <= min(dim, max(cap, 128)):
-        if dim % d == 0:
-            best = d
-        d += 128
+def _conforming_blocks(problems, ks: int, ns: int, hw: HwSpec = TPU_V5E,
+                       caps: tuple = (None, None)) -> Optional[tuple]:
+    """Best (bk, bn) conforming for EVERY problem: multiples of 128 that
+    divide the per-shard dims (within the tuned ``caps``, when given),
+    VMEM-feasible for all buckets, minimal predicted time summed across
+    buckets."""
+    cap_bk = min(ks, caps[0]) if caps[0] else ks
+    cap_bn = min(ns, caps[1]) if caps[1] else ns
+    bks = [d for d in range(128, max(cap_bk, 128) + 1, 128) if ks % d == 0]
+    bns = [d for d in range(128, max(cap_bn, 128) + 1, 128) if ns % d == 0]
+    best, best_score = None, None
+    for bk in bks:
+        for bn in bns:
+            trial = [Plan(p, "skinny_a", bm=p.m, bk=bk, bn=bn)
+                     for p in problems]
+            if not all(feasible(t, hw) for t in trial):
+                continue
+            score = sum(predict(t, hw).score for t in trial)
+            if best_score is None or score < best_score:
+                best, best_score = (bk, bn), score
     return best
 
 

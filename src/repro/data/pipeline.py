@@ -30,13 +30,25 @@ def _splitmix(x: np.ndarray) -> np.ndarray:
     return z ^ (z >> np.uint64(31))
 
 
+# Width of the random-walk step.  Tokens are a cumulative sum of small
+# hashed deltas, so sequences carry learnable next-token structure (the
+# conditional entropy is log2(WALK_DELTAS) bits, far below log2(vocab)) —
+# required for loss-decrease tests — while staying a pure counter-mode
+# function of (seed, step, index, position) for deterministic replay.
+WALK_DELTAS = 8
+
+
 def synth_tokens(seed: int, step: int, index, seq: int, vocab: int) -> np.ndarray:
     """index: (b,) global batch indices -> (b, seq) int32 tokens."""
     b = np.asarray(index, np.uint64)[:, None]
     pos = np.arange(seq, dtype=np.uint64)[None, :]
     key = (np.uint64(seed) << np.uint64(40)) ^ (np.uint64(step) << np.uint64(20))
-    return (_splitmix(b * np.uint64(1_000_003) + pos + key) % np.uint64(vocab)
-            ).astype(np.int32)
+    h = _splitmix(b * np.uint64(1_000_003) + pos + key)
+    deltas = (h % np.uint64(WALK_DELTAS)).astype(np.int64)
+    start = (_splitmix(b * np.uint64(7_368_787) + key) % np.uint64(vocab)
+             ).astype(np.int64)
+    walk = (start + np.cumsum(deltas, axis=1)) % np.int64(vocab)
+    return walk.astype(np.int32)
 
 
 @dataclasses.dataclass

@@ -1,7 +1,15 @@
-"""Serving launcher CLI: pre-packed batched decode.
+"""Serving launcher CLI: batch-adaptive pre-packed decode.
+
+Fixed-size group (legacy):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_4b --reduced \
         --batch 4 --prompt-len 32 --steps 16
+
+Mixed-batch trace (bucketed runtime, DESIGN.md §7) — each comma-separated
+entry is one request group admitted against the bucket set:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_4b --reduced \
+        --trace 3,17,64 --max-batch 64 --steps 8
 """
 
 from __future__ import annotations
@@ -17,11 +25,29 @@ from repro.models.registry import build_model
 from repro.serve.engine import Engine
 
 
+def make_group(cfg, b: int, prompt_len: int) -> dict:
+    batch = {"tokens": (jnp.arange(b * prompt_len)
+                        .reshape(b, prompt_len)
+                        % cfg.vocab_size).astype(jnp.int32)}
+    if cfg.embeds_input:
+        batch["embeds"] = jnp.zeros(
+            (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["enc_frames"] = jnp.zeros(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--trace", default="",
+                    help="comma-separated request-group sizes, e.g. 3,17,64 "
+                         "(overrides --batch)")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="bucket ceiling (default: largest group)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=0)
@@ -35,22 +61,20 @@ def main():
     params, axes = model.init(jax.random.PRNGKey(0))
     max_len = args.max_len or (args.prompt_len + args.steps + 8)
 
-    batch = {"tokens": (jnp.arange(args.batch * args.prompt_len)
-                        .reshape(args.batch, args.prompt_len)
-                        % cfg.vocab_size).astype(jnp.int32)}
-    if cfg.embeds_input:
-        batch["embeds"] = jnp.zeros(
-            (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
-    if cfg.is_encoder_decoder:
-        batch["enc_frames"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    trace = ([int(x) for x in args.trace.split(",") if x.strip()]
+             or [args.batch])
+    max_batch = args.max_batch or max(trace)
 
-    eng = Engine(model, params, axes, max_len=max_len, batch_size=args.batch,
+    eng = Engine(model, params, axes, max_len=max_len, max_batch=max_batch,
                  prepack=not args.no_prepack)
-    res = eng.generate(batch, steps=args.steps)
-    print(f"packed_leaves={len(eng.pack_report)} prefill={res.prefill_s:.3f}s "
-          f"per_token={res.per_token_s*1e3:.2f}ms")
-    print("tokens[0]:", list(map(int, res.tokens[0])))
+    print(f"buckets={eng.buckets} packed_leaves={len(eng.pack_report)}")
+    for b in trace:
+        res = eng.generate(make_group(cfg, b, args.prompt_len),
+                           steps=args.steps)
+        print(f"group b={b:4d} -> buckets={res.buckets} "
+              f"prefill={res.prefill_s:.3f}s "
+              f"per_token={res.per_token_s*1e3:.2f}ms")
+        print("  tokens[0]:", list(map(int, res.tokens[0])))
 
 
 if __name__ == "__main__":

@@ -62,11 +62,16 @@ def _split_in(cfg, proj):
 
 
 def _causal_conv(xbc, w, b):
-    """Depthwise causal conv, width w.shape[0].  xbc: (B,S,C)."""
+    """Depthwise causal conv, width w.shape[0].  xbc: (B,S,C).
+
+    Accumulates in fp32 so the full-sequence path matches the decode
+    step's einsum (which accumulates in fp32) bit-for-bit closely enough
+    for prefill/decode parity in bf16."""
     k = w.shape[0]
-    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
-    out = sum(pad[:, i : i + xbc.shape[1]] * w[i][None, None] for i in range(k))
-    return silu(out + b[None, None])
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0))).astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    out = sum(pad[:, i : i + xbc.shape[1]] * wf[i][None, None] for i in range(k))
+    return silu(out + b.astype(jnp.float32)[None, None]).astype(xbc.dtype)
 
 
 def _ssd_chunked(x, dt, a_neg, bmat, cmat, h0, chunk):
@@ -155,8 +160,9 @@ def mamba2_decode(p, cfg, x, ssm_state, conv_cache, _cur_pos):
     z, dt = z[:, 0], dt[:, 0]
     window = jnp.concatenate([conv_cache, xbc_new], axis=1)  # (B, conv, C)
     conv_cache = window[:, 1:]
-    xbc = silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"])
-               + p["conv_b"][None])
+    xbc = silu(jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+               + p["conv_b"].astype(jnp.float32)[None]).astype(x.dtype)
     xs, bvec, cvec = jnp.split(xbc, [di, di + g * n], axis=-1)
     xh = xs.reshape(b, h, p_).astype(jnp.float32)
     bvec = jnp.repeat(bvec.reshape(b, g, n), h // g, axis=1).astype(jnp.float32)

@@ -1,11 +1,16 @@
-"""Serving engine: pre-packed decode with batched requests.
+"""Serving engine: batch-adaptive pre-packed decode (DESIGN.md §7).
 
 The load path is where the paper's install-time/pre-pack pipeline runs for
 real: every linear weight the decode step will hit is planned by the
-autotuner for the serving batch size and re-laid-out into block-major
-``PackedTensor``s ONCE; thereafter every decoded token replays the
-execution plan (the paper's data-reuse scenario, where pack cost amortizes
-to zero).
+autotuner and re-laid-out into block-major ``PackedTensor``s ONCE, with
+block shapes conforming to EVERY power-of-two batch bucket; thereafter
+every decoded token replays the bucket's execution plan (the paper's
+data-reuse scenario, where pack cost amortizes to zero).
+
+Request admission: an incoming request group of any size b <= max_batch is
+padded up to the nearest bucket and served from that bucket's jit cache —
+variable decode traffic never re-packs weights and never recompiles once a
+bucket is warm.  Groups larger than max_batch are split.
 """
 
 from __future__ import annotations
@@ -17,6 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import bucket_for, buckets_for
 from repro.core.tsmm import prepack_for
 from repro.models.param import is_axes_leaf
 from repro.sharding.context import sharding_ctx
@@ -31,10 +37,13 @@ PACKABLE = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_in",
 MIN_ROWS, MIN_COLS = 512, 512
 
 
-def pack_tree_for_serving(params, axes, batch_m: int, mesh=None,
+def pack_tree_for_serving(params, axes, batch_m, mesh=None,
                           opts: Optional[ShardingOptions] = None):
     """Replace packable weight leaves with planned PackedTensors.
 
+    ``batch_m``: the serving batch size, or a tuple of batch buckets — with
+    buckets the chosen blocks conform to every bucket (DESIGN.md §7) so one
+    packed tree serves all of them.
     Returns (packed_params, report: {path: blocks_shape}).
     """
     opts = opts or ShardingOptions()
@@ -62,7 +71,13 @@ def pack_tree_for_serving(params, axes, batch_m: int, mesh=None,
         report["/".join(path)] = tuple(pk.blocks.shape)
         return pk
 
-    return walk(params, axes, ()), report
+    from repro.core import registry
+    misses_before = registry.stats()["misses"]
+    packed = walk(params, axes, ())
+    if registry.stats()["misses"] > misses_before:
+        registry.flush()   # persist freshly tuned plans in ONE write;
+    # after an install sweep every lookup hits and no write happens
+    return packed, report
 
 
 @dataclasses.dataclass
@@ -71,39 +86,112 @@ class GenerateResult:
     logits_last: jnp.ndarray
     prefill_s: float = 0.0
     per_token_s: float = 0.0
+    buckets: tuple = ()          # bucket(s) the group was served from
 
 
 class Engine:
-    """Batched greedy-decoding engine with aligned positions.
+    """Batch-adaptive greedy-decoding engine with aligned positions.
 
     Requests are padded to a common prompt length and decoded in lockstep
     (continuous batching with aligned steps — the regime the decode_32k
     cell models: 128 streams x one token each against a 32k cache).
+
+    The engine owns power-of-two batch buckets 1..max_batch.  Weights are
+    packed ONCE with blocks conforming to all buckets; each bucket gets
+    its own compiled prefill/decode programs (jit shape specialization),
+    all closing over the same packed param tree.  A legacy fixed-batch
+    caller (``batch_size=N``) gets the full bucket set; pass
+    ``buckets=(N,)`` to pin single-bucket planning/packing.
     """
 
-    def __init__(self, model, params, axes, *, max_len: int, batch_size: int,
+    def __init__(self, model, params, axes, *, max_len: int,
+                 batch_size: Optional[int] = None,
+                 max_batch: Optional[int] = None,
+                 buckets: Optional[tuple] = None,
                  mesh=None, opts: Optional[ShardingOptions] = None,
                  prepack: bool = True):
+        if max_batch is None:
+            max_batch = batch_size
         self.model = model
         self.mesh = mesh
         self.opts = opts or ShardingOptions()
-        self.batch_size = batch_size
+        if buckets:
+            self.buckets = tuple(sorted(buckets))
+            # the largest admissible chunk is the largest bucket: bigger
+            # groups are split, never crashed; with no explicit ceiling
+            # the bucket set IS the ceiling
+            self.max_batch = (min(max_batch, self.buckets[-1])
+                              if max_batch is not None else self.buckets[-1])
+        else:
+            if max_batch is None:
+                raise TypeError("Engine needs one of batch_size, max_batch "
+                                "or buckets")
+            self.max_batch = max_batch
+            self.buckets = buckets_for(self.max_batch)
+        self.batch_size = self.max_batch     # legacy alias
         self.max_len = max_len
         if prepack:
             params, report = pack_tree_for_serving(
-                params, axes, batch_size, mesh, self.opts)
-            log.info("pre-packed %d weight leaves for serving", len(report))
+                params, axes, self.buckets, mesh, self.opts)
+            log.info("pre-packed %d weight leaves for buckets %s",
+                     len(report), self.buckets)
             self.pack_report = report
         else:
             self.pack_report = {}
         self.params = params
+        # jax.jit specializes per input shape, so these two wrappers hold
+        # one compiled prefill/decode executable per bucket, all closing
+        # over the same packed param tree; revisiting a bucket never
+        # recompiles.
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
+    # -- bucket dispatch ------------------------------------------------
+
+    def bucket_of(self, b: int) -> int:
+        return bucket_for(b, self.buckets)
+
+    @staticmethod
+    def _pad_group(batch: dict, b: int, bucket: int) -> dict:
+        if b == bucket:
+            return batch
+        def pad(x):
+            if not hasattr(x, "ndim") or x.ndim == 0 or x.shape[0] != b:
+                return x
+            return jnp.pad(x, ((0, bucket - b),) + ((0, 0),) * (x.ndim - 1))
+        return {k: pad(v) for k, v in batch.items()}
+
+    # -- generation -----------------------------------------------------
+
     def generate(self, batch: dict, steps: int) -> GenerateResult:
+        """Serve one request group of ANY size: groups <= max_batch are
+        padded to the nearest bucket; larger groups are split into
+        max_batch chunks and merged."""
+        b = batch["tokens"].shape[0]
+        if b <= self.max_batch:
+            return self._generate_bucket(batch, steps)
+        parts = []
+        for lo in range(0, b, self.max_batch):
+            hi = min(lo + self.max_batch, b)
+            chunk = {k: (v[lo:hi] if hasattr(v, "ndim") and v.ndim
+                         and v.shape[0] == b else v)
+                     for k, v in batch.items()}
+            parts.append(self._generate_bucket(chunk, steps))
+        return GenerateResult(
+            tokens=jnp.concatenate([r.tokens for r in parts], axis=0),
+            logits_last=jnp.concatenate([r.logits_last for r in parts], axis=0),
+            prefill_s=sum(r.prefill_s for r in parts),
+            per_token_s=sum(r.per_token_s for r in parts),
+            buckets=tuple(bk for r in parts for bk in r.buckets),
+        )
+
+    def _generate_bucket(self, batch: dict, steps: int) -> GenerateResult:
         import time
+        b = batch["tokens"].shape[0]
+        bucket = self.bucket_of(b)
+        batch = self._pad_group(batch, b, bucket)
         with sharding_ctx(self.mesh, self.opts):
-            cache = self.model.init_cache(self.batch_size, self.max_len)
+            cache = self.model.init_cache(bucket, self.max_len)
             t0 = time.perf_counter()
             logits, cache = jax.block_until_ready(
                 self._prefill(self.params, batch, cache))
@@ -117,8 +205,31 @@ class Engine:
             jax.block_until_ready(tok)
             t2 = time.perf_counter()
         return GenerateResult(
-            tokens=jnp.concatenate(toks, axis=1),
-            logits_last=logits,
+            tokens=jnp.concatenate(toks, axis=1)[:b],
+            logits_last=logits[:b],
             prefill_s=t1 - t0,
             per_token_s=(t2 - t1) / max(steps, 1),
+            buckets=(bucket,),
         )
+
+    def serve(self, requests: list, steps: int) -> list:
+        """Admission layer over ``generate``: a list of single requests
+        (dicts with 1D ``tokens``) becomes one aligned group.  Prompts must
+        share a length (lockstep decode).  Returns one GenerateResult per
+        request (views into the group result)."""
+        if not requests:
+            return []
+        lens = {r["tokens"].shape[-1] for r in requests}
+        if len(lens) != 1:
+            raise ValueError(f"aligned decode needs equal prompt lengths, "
+                             f"got {sorted(lens)}")
+        keys = requests[0].keys()
+        group = {k: jnp.stack([jnp.asarray(r[k]) for r in requests])
+                 for k in keys}
+        res = self.generate(group, steps)
+        return [GenerateResult(tokens=res.tokens[i:i + 1],
+                               logits_last=res.logits_last[i:i + 1],
+                               prefill_s=res.prefill_s,
+                               per_token_s=res.per_token_s,
+                               buckets=res.buckets)
+                for i in range(len(requests))]

@@ -1,10 +1,12 @@
 """Hypothesis property tests on system invariants."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 
 from repro.core import registry
