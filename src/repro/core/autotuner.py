@@ -21,7 +21,8 @@ from typing import Optional
 
 from repro.core import registry
 from repro.core.hw import TPU_V5E, HwSpec
-from repro.core.plan import SKINNY_MAX, Plan, PlanSet, Problem, is_tsmm
+from repro.core.plan import (SKINNY_MAX, BucketGrid, Plan, PlanGrid, PlanSet,
+                             Problem, is_tsmm)
 from repro.core.vmem_model import feasible, predict
 
 log = logging.getLogger(__name__)
@@ -144,3 +145,35 @@ def make_plan_set(
     if persist and registry.stats()["misses"] > misses_before:
         registry.flush()
     return PlanSet(plans)
+
+
+def make_plan_grid(
+    k: int,
+    n: int,
+    grid: BucketGrid,
+    dtype: str = "bfloat16",
+    num_shards: int = 1,
+    hw: HwSpec = TPU_V5E,
+    *,
+    measure: Optional[str] = None,
+    persist: bool = True,
+    impl: str = "auto",
+) -> PlanGrid:
+    """Per-cell prefill plans for one (k, n) shape over a 2D bucket grid
+    (DESIGN.md §8).
+
+    Cell (bb, lb) -> Plan for the (bb*lb, k, n) prefill problem; cells
+    sharing a token count share one Plan (and one registry entry).  Like
+    ``make_plan_set`` this is registry-backed and writes back at most once."""
+    misses_before = registry.stats()["misses"]
+    by_tokens = {}
+    for m in grid.token_buckets():
+        if not is_tsmm(m, k, n):
+            continue
+        by_tokens[m] = make_plan(Problem(m, k, n, dtype, num_shards), hw,
+                                 measure=measure, persist=False, impl=impl)
+    plans = {cell: by_tokens[cell[0] * cell[1]] for cell in grid.cells()
+             if cell[0] * cell[1] in by_tokens}
+    if persist and registry.stats()["misses"] > misses_before:
+        registry.flush()
+    return PlanGrid(grid, plans)

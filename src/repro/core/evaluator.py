@@ -59,6 +59,8 @@ def measure_plans(plans: list[Plan], impl: Optional[str] = None,
                   warmup: int = 2, iters: int = 5) -> Plan:
     """Time each candidate, return the winner with measured score."""
     import dataclasses
+    if not plans:
+        raise ValueError("measure_plans needs at least one candidate plan")
     best, best_t = None, float("inf")
     for plan in plans:
         t = time_callable(build_callable(plan, impl), warmup=warmup, iters=iters)

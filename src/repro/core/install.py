@@ -3,30 +3,47 @@ once per machine/platform.
 
     PYTHONPATH=src python -m repro.core.install [--measure] [--archs a,b]
                                                 [--max-batch N]
+                                                [--max-prompt S]
+                                                [--mesh data=4,model=2]
+                                                [--check]
 
 Pre-populates the persistent plan registry with execution plans for every
-TSMM-shaped matmul the model zoo's serving path will hit: every power-of-
-two batch bucket (1..max_batch, DESIGN.md §7) x each arch's projection
-shapes.  A subsequent Engine start is then registry lookups only — the
-runtime stage never tunes.  With ``--measure`` the performance evaluator
-times the short-list (wall-clock; on TPU this times the Pallas kernels).
+TSMM-shaped matmul the model zoo's serving path will hit, over the 2D
+bucket grid (DESIGN.md §8):
+
+* decode: every power-of-two batch bucket (1..max_batch) x each arch's
+  projection shapes;
+* prefill: every (batch-bucket x length-bucket) cell's token count
+  (``bb * lb``) x the same shapes.
+
+A subsequent Engine start is then registry lookups only — the runtime
+stage never tunes.  With ``--measure`` the performance evaluator times the
+short-list (wall-clock; on TPU this times the Pallas kernels).  With
+``--check`` the sweep runs against a fresh in-memory registry and FAILS if
+any lookup misses — the CI contract that a warm cache file fully covers
+the serving path.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import registry
-from repro.core.autotuner import make_plan_set
-from repro.core.plan import Problem, buckets_for, is_tsmm
+from repro.core.autotuner import make_plan_grid, make_plan_set
+from repro.core.plan import (BucketGrid, Problem, buckets_for, is_tsmm,
+                             length_buckets_for)
 from repro.core.registry import cache_path
 
 # Serving batch buckets swept at install time (replaces the old fixed
 # DECODE_BATCHES tuple): every power of two up to the fleet's max batch.
 MAX_SERVE_BATCH = 128
 SERVE_BUCKETS = buckets_for(MAX_SERVE_BATCH)
+# Prompt-length buckets swept for the prefill path (ragged admission).
+MAX_SERVE_PROMPT = 512
+SERVE_LENGTHS = length_buckets_for(MAX_SERVE_PROMPT)
 
 
 def serving_shapes(cfg) -> set:
@@ -49,32 +66,100 @@ def serving_shapes(cfg) -> set:
     return shapes
 
 
-def serving_problems(cfg, buckets: tuple = SERVE_BUCKETS) -> list[Problem]:
-    """The (m, k, n) set the decode path hits for one architecture —
-    every bucket x every TSMM-shaped projection."""
-    shapes = sorted(serving_shapes(cfg))
-    out = []
-    for b in buckets:
-        for (k, n) in shapes:
-            if is_tsmm(b, k, n):
-                out.append(Problem(b, k, n, cfg.dtype))
+def sharded_serving_shapes(cfg, mesh, opts=None) -> set:
+    """Per-shard (k_shard, n_shard, num_shards) for every packable weight
+    leaf of the arch under ``mesh`` — the exact Problem keys a sharded
+    engine's pre-pack looks up (same walk: ``serve.engine.iter_packable``
+    over ``jax.eval_shape`` structs, no parameter allocation)."""
+    import jax
+
+    from repro.models.registry import build_model
+    from repro.serve.engine import iter_packable
+
+    model = build_model(cfg)
+    captured = {}
+
+    def init_shapes(rng):
+        params, axes = model.init(rng)
+        captured["axes"] = axes     # pure python, safe to keep from tracing
+        return params
+
+    shapes = jax.eval_shape(init_shapes, jax.random.PRNGKey(0))
+    out = set()
+    for _path, _leaf, (rows, cols, rs, cs) in iter_packable(
+            shapes, captured["axes"], mesh, opts):
+        if rows % rs or cols % cs:
+            continue                # prepack_for refuses these outright
+        out.add((rows // rs, cols // cs, rs * cs))
     return out
 
 
-def install_arch(cfg, buckets: tuple = SERVE_BUCKETS, *,
+def parse_mesh(spec: str):
+    """``data=4,model=2`` -> an AbstractMesh with those axis sizes.
+
+    Sharding divisors only need axis NAMES and SIZES (``pspec_for`` /
+    ``axis_size``), so the install host needs no actual devices — the
+    sweep can run on a workstation for any target pod slice."""
+    from jax.sharding import AbstractMesh
+    axes = []
+    for part in spec.split(","):
+        name, size = part.split("=")
+        axes.append((name.strip(), int(size)))
+    return AbstractMesh(tuple(axes))
+
+
+def serving_problems(cfg, buckets: tuple = SERVE_BUCKETS,
+                     lengths: tuple = ()) -> list[Problem]:
+    """The (m, k, n) set the serving path hits for one architecture:
+    every batch bucket (decode, m = bb) plus — when ``lengths`` is given —
+    every grid cell's token count (prefill, m = bb * lb)."""
+    shapes = sorted(serving_shapes(cfg))
+    ms = list(buckets)
+    if lengths:
+        grid = BucketGrid(tuple(buckets), tuple(lengths))
+        ms = sorted(set(ms) | set(grid.token_buckets()))
+    out = []
+    for m in ms:
+        for (k, n) in shapes:
+            if is_tsmm(m, k, n):
+                out.append(Problem(m, k, n, cfg.dtype))
+    return out
+
+
+def install_arch(cfg, buckets: tuple = SERVE_BUCKETS,
+                 lengths: tuple = (), *, mesh=None, opts=None,
                  measure: bool = False) -> int:
-    """Sweep one arch's serving shapes over the buckets.  Plans land in
-    the in-memory registry; the caller flushes once (bulk write)."""
+    """Sweep one arch's serving shapes over the bucket grid.  Plans land
+    in the in-memory registry; the caller flushes once (bulk write).
+
+    With ``mesh`` the per-shard shapes of every packable leaf are swept
+    too (num_shards-keyed), so a sharded Engine start is also lookup-only.
+    """
     n_plans = 0
+    mm = "wallclock" if measure else None
+    shard_shapes = set()
+    if mesh is not None:
+        shard_shapes = {s for s in sharded_serving_shapes(cfg, mesh, opts)
+                        if s[2] > 1}
     for (k, n) in sorted(serving_shapes(cfg)):
-        pset = make_plan_set(k, n, buckets, cfg.dtype,
-                             measure="wallclock" if measure else None,
+        pset = make_plan_set(k, n, buckets, cfg.dtype, measure=mm,
                              persist=False)
+        n_plans += len(pset.plans)
+        if lengths:
+            grid = BucketGrid(tuple(buckets), tuple(lengths))
+            pg = make_plan_grid(k, n, grid, cfg.dtype, measure=mm,
+                                persist=False)
+            # cells sharing a token count share a plan; count distinct
+            n_plans += len({p.problem.m for p in pg.plans.values()
+                            if p.problem.m not in buckets})
+    for (ks, ns, s) in sorted(shard_shapes):
+        pset = make_plan_set(ks, ns, buckets, cfg.dtype, num_shards=s,
+                             measure=mm, persist=False)
         n_plans += len(pset.plans)
     return n_plans
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--measure", action="store_true",
                     help="wall-clock the short-list (evaluator stage)")
@@ -82,21 +167,53 @@ def main():
     ap.add_argument("--max-batch", type=int, default=MAX_SERVE_BATCH,
                     help="largest serving batch; buckets are powers of two "
                          "up to this")
-    args = ap.parse_args()
+    ap.add_argument("--max-prompt", type=int, default=MAX_SERVE_PROMPT,
+                    help="largest prompt-length bucket for the prefill "
+                         "sweep (0 disables the length axis)")
+    ap.add_argument("--mesh", default="",
+                    help="target mesh axis sizes, e.g. data=4,model=2 — "
+                         "also sweeps every packable leaf's per-shard "
+                         "shapes so a SHARDED engine start is lookup-only "
+                         "(no devices needed on the install host)")
+    ap.add_argument("--check", action="store_true",
+                    help="verify-only: re-run the sweep against the cache "
+                         "file with a fresh memory and fail on any registry "
+                         "miss (the engine-start-is-lookup-only contract)")
+    args = ap.parse_args(argv)
     archs = ([a.strip() for a in args.archs.split(",") if a.strip()]
              or ARCH_IDS)
     buckets = buckets_for(args.max_batch)
+    lengths = length_buckets_for(args.max_prompt) if args.max_prompt else ()
+    mesh = parse_mesh(args.mesh) if args.mesh else None
+
+    if args.check:
+        registry.clear_memory()
 
     t0 = time.time()
     n_plans = 0
     for arch in archs:
         cfg = get_config(arch)
-        n = install_arch(cfg, buckets, measure=args.measure)
-        registry.flush()   # one write per arch: an interrupted sweep
-        n_plans += n       # (e.g. a killed --measure run) keeps its work
+        n = install_arch(cfg, buckets, lengths, mesh=mesh,
+                         measure=args.measure)
+        if not args.check:
+            registry.flush()   # one write per arch: an interrupted sweep
+        n_plans += n           # (a killed --measure run) keeps its work
         print(f"{arch:24s} {n:3d} plans")
+
+    if args.check:
+        stats = registry.stats()
+        if stats["misses"]:
+            print(f"CHECK FAILED: {stats['misses']} registry misses — the "
+                  f"cache at {cache_path()} does not cover the serving "
+                  f"sweep (hits={stats['hits']})")
+            sys.exit(1)
+        print(f"check ok: {stats['hits']} lookups, all hits "
+              f"-> {cache_path()}")
+        return
+
     print(f"\ninstalled {n_plans} execution plans over buckets {buckets} "
-          f"in {time.time()-t0:.1f}s -> {cache_path()}")
+          f"x lengths {lengths or '(none)'} in {time.time()-t0:.1f}s "
+          f"-> {cache_path()}")
 
 
 if __name__ == "__main__":

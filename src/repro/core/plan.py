@@ -97,23 +97,33 @@ class Plan:
 
 
 # ---------------------------------------------------------------------------
-# Batch buckets + PlanSet (DESIGN.md §7)
+# Batch buckets + PlanSet (DESIGN.md §7) and the 2D bucket grid (§8)
 # ---------------------------------------------------------------------------
 
 
-def buckets_for(max_batch: int) -> tuple:
-    """Power-of-two batch buckets 1..max_batch.
+def buckets_for(max_batch: int, min_bucket: int = 1) -> tuple:
+    """Power-of-two buckets ``min_bucket``..max_batch.
 
     ``max_batch`` itself is always a bucket, so a full batch never pads."""
     if max_batch < 1:
         raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if min_bucket < 1:
+        raise ValueError(f"min_bucket must be >= 1, got {min_bucket}")
     out = []
-    b = 1
+    b = min_bucket
     while b < max_batch:
         out.append(b)
         b *= 2
     out.append(max_batch)
     return tuple(out)
+
+
+def length_buckets_for(max_prompt: int, min_prompt: int = 8) -> tuple:
+    """Power-of-two prompt-length buckets min_prompt..max_prompt.
+
+    The floor keeps the jit-program count bounded (a 1-token prompt shares
+    the ``min_prompt`` program); ``max_prompt`` is always a bucket."""
+    return buckets_for(max_prompt, min(min_prompt, max_prompt))
 
 
 def bucket_for(n: int, buckets: tuple) -> int:
@@ -142,15 +152,18 @@ class PlanSet:
         return tuple(sorted(self.plans))
 
     def for_batch(self, m: int) -> Optional[Plan]:
-        """Plan of the smallest bucket >= m (largest bucket if m exceeds
-        all, None if the set is empty)."""
+        """Plan of the smallest bucket >= m.
+
+        Returns None when the set is empty OR when ``m`` exceeds every
+        bucket: a plan tuned for a smaller batch would replay with
+        ``bm = problem.m`` blocks too small for the real batch, so the
+        caller must split the group or fall back to plain GEMM instead of
+        silently running a mistuned plan."""
         bs = self.buckets
-        if not bs:
-            return None
         for b in bs:
             if b >= m:
                 return self.plans[b]
-        return self.plans[bs[-1]]
+        return None
 
     def to_json(self) -> dict:
         return {str(m): p.to_json() for m, p in self.plans.items()}
@@ -158,3 +171,98 @@ class PlanSet:
     @staticmethod
     def from_json(d: dict) -> "PlanSet":
         return PlanSet({int(m): Plan.from_json(p) for m, p in d.items()})
+
+
+# ---------------------------------------------------------------------------
+# 2D bucket grid: batch-bucket x length-bucket (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketGrid:
+    """Admission grid for ragged traffic: requests arrive with any
+    (batch, prompt-length) and are padded up to the minimal covering
+    (batch-bucket, length-bucket) cell.
+
+    Execution plans, the install sweep, and the engine's jit caches are
+    all keyed by the cell: a cell's prefill problem has ``m = bb * lb``
+    tokens, its decode problem ``m = bb``.  Both axes are power-of-two
+    ladders whose ceiling is always a bucket (see ``buckets_for``).
+    """
+
+    batch: tuple
+    length: tuple
+
+    @staticmethod
+    def build(max_batch: int, max_prompt: int,
+              min_prompt: int = 8) -> "BucketGrid":
+        return BucketGrid(buckets_for(max_batch),
+                          length_buckets_for(max_prompt, min_prompt))
+
+    @property
+    def max_batch(self) -> int:
+        return self.batch[-1]
+
+    @property
+    def max_prompt(self) -> int:
+        return self.length[-1]
+
+    def cell_for(self, b: int, s: int) -> tuple:
+        """Minimal covering (batch_bucket, length_bucket) for a group of
+        ``b`` requests whose longest prompt is ``s`` tokens."""
+        return (bucket_for(b, self.batch), bucket_for(s, self.length))
+
+    def length_bucket(self, s: int) -> int:
+        return bucket_for(s, self.length)
+
+    def cells(self) -> tuple:
+        return tuple((bb, lb) for bb in self.batch for lb in self.length)
+
+    def token_buckets(self) -> tuple:
+        """Distinct prefill token counts ``bb * lb`` over all cells —
+        the m-values the install sweep plans for the prefill path."""
+        return tuple(sorted({bb * lb for bb, lb in self.cells()}))
+
+    def padding_waste(self, b: int, s: int) -> int:
+        """Padded-token overhead of admitting (b, s): cell tokens minus
+        real tokens."""
+        bb, lb = self.cell_for(b, s)
+        return bb * lb - b * s
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanGrid:
+    """Per-cell prefill plans for one (k, n) weight shape.
+
+    The cell (bb, lb) maps to the TSMM problem (bb*lb, k, n); cells whose
+    token count is not TSMM-shaped are absent (plain GEMM at runtime).
+    Distinct cells with the same token count share one Plan object."""
+
+    grid: BucketGrid
+    plans: Mapping[tuple, Plan]
+
+    def for_request(self, b: int, s: int) -> Optional[Plan]:
+        """Plan of the minimal covering cell (None if outside the grid or
+        the cell is not TSMM-shaped)."""
+        try:
+            cell = self.grid.cell_for(b, s)
+        except ValueError:
+            return None
+        return self.plans.get(cell)
+
+    def to_json(self) -> dict:
+        return {
+            "batch": list(self.grid.batch),
+            "length": list(self.grid.length),
+            "plans": {f"{bb}x{lb}": p.to_json()
+                      for (bb, lb), p in self.plans.items()},
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "PlanGrid":
+        grid = BucketGrid(tuple(d["batch"]), tuple(d["length"]))
+        plans = {}
+        for key, pj in d["plans"].items():
+            bb, lb = key.split("x")
+            plans[(int(bb), int(lb))] = Plan.from_json(pj)
+        return PlanGrid(grid, plans)

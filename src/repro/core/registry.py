@@ -69,10 +69,37 @@ def get(problem_key: str) -> Optional[Plan]:
         return plan
 
 
+def _merge_disk() -> None:
+    """Fold plans persisted by OTHER processes into ``_MEM`` (lock held).
+
+    Concurrent launchers on a pod slice share one cache file over NFS:
+    anything they flushed after our initial ``_load_file`` is on disk but
+    not in our memory, and a plain dump of ``_MEM`` would clobber it.
+    Our own in-memory plans win key conflicts (freshest tuning)."""
+    path = cache_path()
+    if not path.exists():
+        return
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return  # mid-replace or corrupt: nothing mergeable
+    for k, v in raw.items():
+        if k not in _MEM:
+            try:
+                _MEM[k] = Plan.from_json(v)
+            except (TypeError, KeyError):
+                continue
+
+
 def _write_file() -> None:
-    """Single atomic write of the whole in-memory map (lock held)."""
+    """Single atomic write of the whole in-memory map (lock held).
+
+    Re-reads and merges the on-disk map first so two writers never lose
+    each other's plans: last-writer-wins only per key, not per file."""
     path = cache_path()
     path.parent.mkdir(parents=True, exist_ok=True)
+    _merge_disk()
     blob = {k: p.to_json() for k, p in _MEM.items()}
     fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
     try:

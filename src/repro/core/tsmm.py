@@ -82,7 +82,10 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
         else:
             out = ops.tsmm(a2, b, bm=plan.bm, bk=plan.bk, impl=impl)
     else:
-        out = jnp.dot(a2, b)
+        # accumulate in f32 like every planned path (ops.tsmm* all pass
+        # preferred_element_type) so bf16 results do not depend on whether
+        # a plan existed for the shape
+        out = jnp.dot(a2, b, preferred_element_type=jnp.float32).astype(a.dtype)
     if bias is not None:
         out = out + bias.astype(out.dtype)
     if act is not None:

@@ -10,6 +10,14 @@ entry is one request group admitted against the bucket set:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_4b --reduced \
         --trace 3,17,64 --max-batch 64 --steps 8
+
+Ragged trace (continuous batching, DESIGN.md §8) — ``b:p`` entries are
+``b`` requests with prompt length ``p``; mixed lengths (or ``--queue``)
+route the whole trace through the slot-pool scheduler, which prints its
+telemetry (padding waste, queue latency, slot occupancy):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_4b --reduced \
+        --trace 2:9,3:30,1:5 --max-batch 4 --steps 8
 """
 
 from __future__ import annotations
@@ -19,10 +27,12 @@ import logging
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import get_config, get_reduced_config
 from repro.models.registry import build_model
 from repro.serve.engine import Engine
+from repro.serve.scheduler import Request
 
 
 def make_group(cfg, b: int, prompt_len: int) -> dict:
@@ -38,14 +48,34 @@ def make_group(cfg, b: int, prompt_len: int) -> dict:
     return batch
 
 
+def parse_trace(spec: str, default_len: int) -> list:
+    """Each entry: ``b`` (group of b at the default prompt length) or
+    ``b:p`` (group of b requests with prompt length p)."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if ":" in part:
+            b, p = part.split(":")
+            out.append((int(b), int(p)))
+        else:
+            out.append((int(part), default_len))
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--trace", default="",
-                    help="comma-separated request-group sizes, e.g. 3,17,64 "
-                         "(overrides --batch)")
+                    help="comma-separated request groups: sizes (3,17,64) "
+                         "or b:prompt_len pairs (2:9,3:30) — mixed lengths "
+                         "run the continuous-batching scheduler")
+    ap.add_argument("--queue", action="store_true",
+                    help="force the continuous-batching scheduler even for "
+                         "a uniform-length trace")
     ap.add_argument("--max-batch", type=int, default=0,
                     help="bucket ceiling (default: largest group)")
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -59,18 +89,43 @@ def main():
            else get_config(args.arch))
     model = build_model(cfg)
     params, axes = model.init(jax.random.PRNGKey(0))
-    max_len = args.max_len or (args.prompt_len + args.steps + 8)
 
-    trace = ([int(x) for x in args.trace.split(",") if x.strip()]
-             or [args.batch])
-    max_batch = args.max_batch or max(trace)
+    trace = parse_trace(args.trace, args.prompt_len) or [(args.batch,
+                                                          args.prompt_len)]
+    max_batch = args.max_batch or max(b for b, _ in trace)
+    max_prompt = max(p for _, p in trace)
+    ragged = args.queue or len({p for _, p in trace}) > 1
+    if ragged:
+        # global-clock capacity: base length bucket + every decode step
+        total_steps = sum(b * args.steps for b, _ in trace)
+        max_len = args.max_len or (2 * max_prompt + total_steps + 8)
+    else:
+        max_len = args.max_len or (max_prompt + args.steps + 8)
 
     eng = Engine(model, params, axes, max_len=max_len, max_batch=max_batch,
-                 prepack=not args.no_prepack)
-    print(f"buckets={eng.buckets} packed_leaves={len(eng.pack_report)}")
-    for b in trace:
-        res = eng.generate(make_group(cfg, b, args.prompt_len),
-                           steps=args.steps)
+                 max_prompt=max_prompt, prepack=not args.no_prepack)
+    print(f"buckets={eng.buckets} length_buckets={eng.grid.length} "
+          f"packed_leaves={len(eng.pack_report)}")
+
+    if ragged:
+        rng = np.random.default_rng(0)
+        reqs = [Request(tokens=rng.integers(0, cfg.vocab_size, size=p),
+                        max_new_tokens=args.steps, rid=f"g{i}r{j}")
+                for i, (b, p) in enumerate(trace) for j in range(b)]
+        results, stats = eng.serve_queue(reqs)
+        for r in results:
+            print(f"req {str(r.rid):8s} prompt={r.prompt_len:4d} "
+                  f"lb={r.length_bucket:4d} admitted@{r.admitted_at} "
+                  f"done@{r.finished_at} waited={r.queue_steps} "
+                  f"tokens={list(map(int, r.tokens[:8]))}"
+                  f"{'...' if len(r.tokens) > 8 else ''}")
+        print("-- scheduler telemetry --")
+        for k, v in stats.rows():
+            print(f"  {k:20s} {v}")
+        return
+
+    for b, p in trace:
+        res = eng.generate(make_group(cfg, b, p), steps=args.steps)
         print(f"group b={b:4d} -> buckets={res.buckets} "
               f"prefill={res.prefill_s:.3f}s "
               f"per_token={res.per_token_s*1e3:.2f}ms")

@@ -38,8 +38,12 @@ def _divisor_chunk(s: int, chunk: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _chunk_body(q, k, v, q_pos, k_pos, scale, window, causal):
-    """One (q-chunk x k-chunk) tile.  q: (B,Cq,KH,G,D) k/v: (B,Ck,KH,D)."""
+def _chunk_body(q, k, v, q_pos, k_pos, scale, window, causal, valid_from=None):
+    """One (q-chunk x k-chunk) tile.  q: (B,Cq,KH,G,D) k/v: (B,Ck,KH,D).
+
+    ``valid_from``: optional (B,) absolute position of each row's first
+    real token — keys before it are left-padding and masked out (ragged-
+    prompt admission, DESIGN.md §8)."""
     s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
                    preferred_element_type=jnp.float32) * scale
     mask = jnp.ones((q.shape[1], k.shape[1]), bool)
@@ -47,22 +51,38 @@ def _chunk_body(q, k, v, q_pos, k_pos, scale, window, causal):
         mask &= k_pos[None, :] <= q_pos[:, None]
     if window:
         mask &= q_pos[:, None] - k_pos[None, :] < window
-    return jnp.where(mask[None, None, None], s, NEG_INF)
+    if valid_from is None:
+        return jnp.where(mask[None, None, None], s, NEG_INF)
+    mask = mask[None] & (k_pos[None, None, :] >= valid_from[:, None, None])
+    return jnp.where(mask[:, None, None], s, NEG_INF)
 
 
 def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                      chunk: int = 512, q_offset: int = 0):
+                      chunk: int = 512, q_offset=0, k_offset=None,
+                      valid_from=None):
     """q: (B,Sq,H,D)  k,v: (B,Sk,KH,D).  Returns (B,Sq,H,D).
 
     Online-softmax double scan: outer over q chunks (sequential, O(1)
     extra memory), inner over k chunks (carries m/l/acc).
 
+    ``k_offset`` defaults to ``q_offset`` (aligned self-attention: both
+    operands carry the same absolute positions, so an offset stream —
+    ragged admission at a nonzero clock — keeps a correct causal mask);
+    pass ``k_offset=0`` for cross-attention keys that start at 0.
+    ``valid_from``: (B,) absolute first-real-token position per row
+    (left-pad masking); ``q_offset`` may be traced under jit.
+
     On TPU, full-window self-attention dispatches to the fused Pallas
     flash kernel (kernels/flash_attention.py): scores stay in VMEM and
     above-diagonal blocks are skipped — the jnp path below is the CPU /
-    SWA / cross-attention fallback and the kernel's oracle.
+    SWA / cross-attention / ragged fallback and the kernel's oracle.
     """
-    if (jax.default_backend() == "tpu" and window == 0 and q_offset == 0
+    if k_offset is None:
+        k_offset = q_offset
+    if (jax.default_backend() == "tpu" and window == 0
+            and isinstance(q_offset, int) and q_offset == 0
+            and isinstance(k_offset, int) and k_offset == 0
+            and valid_from is None
             and q.shape[1] == k.shape[1] and q.shape[1] % 256 == 0):
         from repro.kernels.flash_attention import flash_attention
         g = q.shape[2] // k.shape[2]
@@ -91,7 +111,8 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
         def k_step(carry, ki):
             m, l, acc = carry
             kb, vb, kpos = ki
-            s = _chunk_body(qc, kb, vb, qpos, kpos, scale, window, causal)
+            s = _chunk_body(qc, kb, vb, qpos, kpos, scale, window, causal,
+                            valid_from)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -103,7 +124,7 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
         m0 = jnp.full((b, kh, g, cq), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, kh, g, cq), jnp.float32)
         a0 = jnp.zeros((b, kh, g, cq, dv), jnp.float32)
-        kpos_all = (jnp.arange(nk * ck) ).reshape(nk, ck)
+        kpos_all = (k_offset + jnp.arange(nk * ck)).reshape(nk, ck)
         (m, l, acc), _ = jax.lax.scan(
             k_step, (m0, l0, a0),
             (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kpos_all))
@@ -117,9 +138,12 @@ def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
 
 
-def decode_attention(q, k_cache, v_cache, k_pos, cur_pos, *, window: int = 0):
+def decode_attention(q, k_cache, v_cache, k_pos, cur_pos, *, window: int = 0,
+                     valid_from=None):
     """One-step attention.  q: (B,1,H,D); caches: (B,S,KH,D);
-    k_pos: (S,) absolute positions held by each cache slot (-1 = empty)."""
+    k_pos: (S,) absolute positions held by each cache slot (-1 = empty);
+    valid_from: optional (B,) per-row first-valid position — slots before
+    it belong to left-padding or a previous (recycled) stream."""
     b, _, h, d = q.shape
     kh = k_cache.shape[2]
     g = h // kh
@@ -129,7 +153,12 @@ def decode_attention(q, k_cache, v_cache, k_pos, cur_pos, *, window: int = 0):
     valid = (k_pos >= 0) & (k_pos <= cur_pos)
     if window:
         valid &= cur_pos - k_pos < window
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    if valid_from is not None:
+        s = jnp.where((valid[None, :] &
+                       (k_pos[None, :] >= valid_from[:, None]))[:, None, None],
+                      s, NEG_INF)
+    else:
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache,
                      preferred_element_type=jnp.float32)
@@ -167,10 +196,13 @@ def _qkv(p, cfg, x, kv_from=None):
     return q, k, v
 
 
-def gqa_forward(p, cfg, x, *, causal=True, pos_offset: int = 0,
-                chunk: int = 512, use_rope: bool = True, kv_from=None):
+def gqa_forward(p, cfg, x, *, causal=True, pos_offset=0,
+                chunk: int = 512, use_rope: bool = True, kv_from=None,
+                valid_from=None):
     """Full-sequence attention (train / prefill).  Returns (out, (k, v)).
-    ``kv_from``: cross-attention source sequence (whisper decoder)."""
+    ``kv_from``: cross-attention source sequence (whisper decoder).
+    ``valid_from``: (B,) absolute left-pad boundary per row (ragged
+    admission); ``pos_offset`` may be traced (admission at a clock)."""
     b, s, _ = x.shape
     q, k, v = _qkv(p, cfg, x, kv_from=kv_from)
     pos = pos_offset + jnp.arange(s)
@@ -183,16 +215,19 @@ def gqa_forward(p, cfg, x, *, causal=True, pos_offset: int = 0,
     v = shard_act(v, "batch", "seq", "kvheads", None)
     out = chunked_attention(q, k, v, causal=causal,
                             window=cfg.sliding_window, chunk=chunk,
-                            q_offset=pos_offset)
+                            q_offset=pos_offset,
+                            k_offset=0 if kv_from is not None else None,
+                            valid_from=valid_from)
     out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
     return linear(out, p["wo"]), (k, v)
 
 
 def gqa_decode(p, cfg, x, cache_k, cache_v, slot_pos, cur_pos, *,
-               use_rope: bool = True):
+               use_rope: bool = True, valid_from=None):
     """One token.  x: (B,1,d).  Caches (B,S,KH,D); slot_pos (S,) absolute
     positions per slot.  Batch is position-aligned (continuous batching
-    with aligned steps — see serve/engine.py)."""
+    with aligned steps — see serve/engine.py); ``valid_from`` (B,) masks
+    each row's cache below its own admission boundary."""
     b = x.shape[0]
     q, k, v = _qkv(p, cfg, x)
     cur = jnp.asarray(cur_pos, jnp.int32)
@@ -205,7 +240,7 @@ def gqa_decode(p, cfg, x, cache_k, cache_v, slot_pos, cur_pos, *,
     cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
     slot_pos = jax.lax.dynamic_update_slice(slot_pos, cur[None], (slot,))
     out = decode_attention(q, cache_k, cache_v, slot_pos, cur,
-                           window=cfg.sliding_window)
+                           window=cfg.sliding_window, valid_from=valid_from)
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
     return linear(out, p["wo"]), cache_k, cache_v, slot_pos
 
@@ -262,19 +297,20 @@ def _mla_qkv_train(p, cfg, x, pos):
     return q_full, k_full, v, c_kv, k_rope[:, :, 0, :]
 
 
-def mla_forward(p, cfg, x, *, pos_offset: int = 0, chunk: int = 512):
+def mla_forward(p, cfg, x, *, pos_offset=0, chunk: int = 512,
+                valid_from=None):
     """Train/prefill MLA.  Returns (out, (c_kv, k_rope)) for the cache."""
     b, s, _ = x.shape
     pos = pos_offset + jnp.arange(s)
     q, k, v, c_kv, k_rope = _mla_qkv_train(p, cfg, x, pos)
     out = chunked_attention(q, k, v, causal=True, chunk=chunk,
-                            q_offset=pos_offset)
+                            q_offset=pos_offset, valid_from=valid_from)
     # note: softmax scale uses full q dim (dn+dr) inside chunked_attention
     out = out.reshape(b, s, cfg.num_heads * cfg.v_head_dim)
     return linear(out, p["wo"]), (c_kv, k_rope)
 
 
-def mla_decode(p, cfg, x, cache_c, cache_kr, cur_pos):
+def mla_decode(p, cfg, x, cache_c, cache_kr, cur_pos, *, valid_from=None):
     """Absorbed-matrix decode over the compressed cache.
 
     cache_c: (B,S,kvr)  cache_kr: (B,S,dr).  The q_nope->c-space and
@@ -308,8 +344,14 @@ def mla_decode(p, cfg, x, cache_c, cache_kr, cur_pos):
          + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
                       cache_kr.astype(jnp.float32)))
     s = s * (dn + dr) ** -0.5
-    valid = jnp.arange(cache_c.shape[1]) <= cur_pos
-    s = jnp.where(valid[None, None], s, NEG_INF)
+    pos_s = jnp.arange(cache_c.shape[1])
+    valid = pos_s <= cur_pos
+    if valid_from is not None:
+        s = jnp.where((valid[None, :] &
+                       (pos_s[None, :] >= valid_from[:, None]))[:, None],
+                      s, NEG_INF)
+    else:
+        s = jnp.where(valid[None, None], s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bhs,bsc->bhc", pattn, cache_c.astype(jnp.float32))
     o = jnp.einsum("bhc,chv->bhv", o_c, w_uv).astype(x.dtype)

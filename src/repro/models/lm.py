@@ -50,7 +50,8 @@ def _init_layer(rng, cfg, kind: str):
     return pt.build()
 
 
-def _layer_fwd(p, cfg, x, kind: str, *, pos_offset=0, chunk=512):
+def _layer_fwd(p, cfg, x, kind: str, *, pos_offset=0, chunk=512,
+               valid_from=None):
     """Returns (x, kv_for_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -60,10 +61,10 @@ def _layer_fwd(p, cfg, x, kind: str, *, pos_offset=0, chunk=512):
     hin = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.use_mla:
         h, kv = A.mla_forward(p["attn"], cfg, hin, pos_offset=pos_offset,
-                              chunk=chunk)
+                              chunk=chunk, valid_from=valid_from)
     else:
         h, kv = A.gqa_forward(p["attn"], cfg, hin, pos_offset=pos_offset,
-                              chunk=chunk)
+                              chunk=chunk, valid_from=valid_from)
     x = x + h
     hin = rmsnorm(x, p["ln2"], cfg.norm_eps)
     if kind == "moe":
@@ -73,7 +74,8 @@ def _layer_fwd(p, cfg, x, kind: str, *, pos_offset=0, chunk=512):
     return x + h, kv, aux
 
 
-def _layer_decode(p, cfg, x, lcache, slot_pos, pos, kind: str):
+def _layer_decode(p, cfg, x, lcache, slot_pos, pos, kind: str,
+                  valid_from=None):
     """One-token step through one layer.  Returns (x, new_lcache)."""
     if kind == "ssm":
         h, ssm, conv = M.mamba2_decode(p["mamba"], cfg,
@@ -82,11 +84,12 @@ def _layer_decode(p, cfg, x, lcache, slot_pos, pos, kind: str):
         return x + h, (ssm, conv)
     hin = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if cfg.use_mla:
-        h, c, kr = A.mla_decode(p["attn"], cfg, hin, lcache[0], lcache[1], pos)
+        h, c, kr = A.mla_decode(p["attn"], cfg, hin, lcache[0], lcache[1], pos,
+                                valid_from=valid_from)
         new = (c, kr)
     else:
         h, ck, cv, _ = A.gqa_decode(p["attn"], cfg, hin, lcache[0], lcache[1],
-                                    slot_pos, pos)
+                                    slot_pos, pos, valid_from=valid_from)
         new = (ck, cv)
     x = x + h
     hin = rmsnorm(x, p["ln2"], cfg.norm_eps)
@@ -141,23 +144,33 @@ def _inputs_to_h(params, cfg, batch):
 
 
 def lm_forward(params, cfg, batch, *, collect_cache: bool = False,
-               pos_offset: int = 0, chunk: int = 512):
-    """Returns (logits f32, aux_loss, kv_stack | None)."""
+               pos_offset=0, chunk: int = 512):
+    """Returns (logits f32, aux_loss, kv_stack | None).
+
+    ``batch["pad"]`` (optional, (B,) int32): per-row count of left-pad
+    tokens — ragged-prompt admission pads each prompt to a length bucket
+    on the LEFT and masks the pad positions out of attention, keeping the
+    batch position-aligned for lockstep decode (DESIGN.md §8)."""
     kind = _kind(cfg)
     x = _inputs_to_h(params, cfg, batch)
+    valid_from = None
+    if batch.get("pad") is not None:
+        # absolute mask boundary: row r's real tokens start at offset+pad[r]
+        valid_from = pos_offset + batch["pad"].astype(jnp.int32)
 
     aux_total = jnp.zeros((), jnp.float32)
     dense_kvs = {}
     for i in range(cfg.first_k_dense):
         x, kv, aux = _layer_fwd(params[f"dense{i}"], cfg, x, "dense",
-                                pos_offset=pos_offset, chunk=chunk)
+                                pos_offset=pos_offset, chunk=chunk,
+                                valid_from=valid_from)
         if collect_cache:
             dense_kvs[i] = kv
         aux_total = aux_total + aux
 
     def body(xc, lp):
         xo, kv, aux = _layer_fwd(lp, cfg, xc, kind, pos_offset=pos_offset,
-                                 chunk=chunk)
+                                 chunk=chunk, valid_from=valid_from)
         return xo, (kv if collect_cache else None, aux)
 
     if cfg.remat:
@@ -201,6 +214,9 @@ def init_cache(cfg, batch_size: int, max_len: int):
         return cache
     slots = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     cache["slot_pos"] = jnp.full((slots,), -1, jnp.int32)
+    # per-row admission boundary: cache positions < valid_from[r] are
+    # left-padding or a recycled slot's dead stream (DESIGN.md §8)
+    cache["valid_from"] = jnp.zeros((batch_size,), jnp.int32)
     if cfg.use_mla:
         cache["c"] = jnp.zeros((n_scan, batch_size, slots, cfg.kv_lora_rank), dt)
         cache["kr"] = jnp.zeros((n_scan, batch_size, slots, cfg.rope_head_dim), dt)
@@ -231,6 +247,11 @@ def lm_prefill(params, cfg, batch, cache, *, chunk: int = 512):
     logits, _, (kvs, dense_kvs) = lm_forward(params, cfg, batch,
                                              collect_cache=True, chunk=chunk)
     cache = dict(cache)
+    if "valid_from" in cache:
+        pad = batch.get("pad")
+        b = batch["tokens"].shape[0]
+        cache["valid_from"] = (pad.astype(jnp.int32) if pad is not None
+                               else jnp.zeros((b,), jnp.int32))
     if kind == "ssm":
         cache["ssm"], cache["conv"] = kvs
         cache["pos"] = jnp.asarray(s, jnp.int32)
@@ -280,18 +301,20 @@ def lm_decode_step(params, cfg, cache, tokens):
         slot_pos = jax.lax.dynamic_update_slice(
             cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
         cache["slot_pos"] = slot_pos
+        valid_from = cache.get("valid_from")
         for i in range(cfg.first_k_dense):
             a, b_ = _cache_pair_names(cfg)
             lc = (cache[f"dense{i}_{a}"], cache[f"dense{i}_{b_}"])
             x, new = _layer_decode(params[f"dense{i}"], cfg, x, lc, slot_pos,
-                                   pos, "dense")
+                                   pos, "dense", valid_from=valid_from)
             cache[f"dense{i}_{a}"], cache[f"dense{i}_{b_}"] = new
         a, b_ = _cache_pair_names(cfg)
         xs = (params["layers"], cache[a], cache[b_])
 
         def body(xc, layer_in):
             lp, lk, lv = layer_in
-            xo, new = _layer_decode(lp, cfg, xc, (lk, lv), slot_pos, pos, kind)
+            xo, new = _layer_decode(lp, cfg, xc, (lk, lv), slot_pos, pos, kind,
+                                    valid_from=valid_from)
             return xo, new
 
         x, (nk, nv) = jax.lax.scan(body, x, xs)
@@ -311,3 +334,64 @@ def lm_decode_step(params, cfg, cache, tokens):
     logits = unembed(params["embed"], x, cfg.tie_embeddings)
     cache["pos"] = pos + 1
     return logits, cache
+
+
+def lm_prefill_row(params, cfg, batch, cache, row, t_end):
+    """Ragged admission (DESIGN.md §8): prefill ONE request into row
+    ``row`` of a LIVE decode cache without disturbing the other streams.
+
+    ``batch`` has leading dim 1, its prompt left-padded to a length
+    bucket ``lb`` (``batch["pad"]``: (1,) pad count).  The prompt
+    occupies absolute positions ``[t_end - lb, t_end)`` — RoPE attention
+    is relative, so a stream shifted to the scheduler's clock decodes
+    identically to one placed at position 0 — and ``valid_from[row]``
+    masks the pad region plus whatever a previous stream left in the
+    recycled slot.  ``row``/``t_end`` may be traced: ONE compiled program
+    per length bucket serves every slot and clock value.
+
+    Returns (last_logits (1,1,V), cache); the caller owns the clock
+    (``cache["pos"]`` is not touched).
+    """
+    kind = _kind(cfg)
+    if kind == "ssm":
+        raise NotImplementedError(
+            "ragged admission needs an attention cache; SSM state is "
+            "order-dependent and cannot mask left-padding")
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "ragged admission into a rolling sliding-window cache is not "
+            "supported (slot != absolute position)")
+    lb = batch["tokens"].shape[1] + (batch["embeds"].shape[1]
+                                     if cfg.embeds_input else 0)
+    row = jnp.asarray(row, jnp.int32)
+    t0 = jnp.asarray(t_end, jnp.int32) - lb
+    logits, _, (kvs, dense_kvs) = lm_forward(params, cfg, batch,
+                                             collect_cache=True,
+                                             pos_offset=t0)
+    cache = dict(cache)
+    a, b_ = _cache_pair_names(cfg)
+    ka, kb = kvs
+    # kvs: (n_scan, 1, lb, ...) -> this row's slots [t0, t_end)
+    cache[a] = jax.lax.dynamic_update_slice(
+        cache[a], ka.astype(cache[a].dtype),
+        (0, row, t0) + (0,) * (cache[a].ndim - 3))
+    cache[b_] = jax.lax.dynamic_update_slice(
+        cache[b_], kb.astype(cache[b_].dtype),
+        (0, row, t0) + (0,) * (cache[b_].ndim - 3))
+    for i, (da, db) in dense_kvs.items():
+        cache[f"dense{i}_{a}"] = jax.lax.dynamic_update_slice(
+            cache[f"dense{i}_{a}"], da.astype(cache[f"dense{i}_{a}"].dtype),
+            (row, t0) + (0,) * (da.ndim - 2))
+        cache[f"dense{i}_{b_}"] = jax.lax.dynamic_update_slice(
+            cache[f"dense{i}_{b_}"], db.astype(cache[f"dense{i}_{b_}"].dtype),
+            (row, t0) + (0,) * (db.ndim - 2))
+    pad = batch.get("pad")
+    vf = t0 + (pad.astype(jnp.int32)[0] if pad is not None else 0)
+    cache["valid_from"] = jax.lax.dynamic_update_slice(
+        cache["valid_from"], vf[None], (row,))
+    # mark the occupied slots in the shared slot->position map (idempotent:
+    # slot == absolute position when there is no sliding window)
+    sl = jnp.arange(cache["slot_pos"].shape[0], dtype=jnp.int32)
+    cache["slot_pos"] = jnp.where((sl >= t0) & (sl < t0 + lb), sl,
+                                  cache["slot_pos"]).astype(jnp.int32)
+    return logits[:, -1:], cache

@@ -31,6 +31,9 @@ class ModelDef:
     init_cache: Callable       # (batch_size, max_len) -> cache
     prefill: Callable          # (params, batch, cache) -> (logits, cache)
     decode_step: Callable      # (params, cache, tokens) -> (logits, cache)
+    # ragged admission (DESIGN.md §8): (params, batch, cache, row, t_end)
+    # -> (logits, cache); None for families without an attention cache
+    prefill_row: Any = None
 
 
 def build_model(cfg: ModelConfig) -> ModelDef:
@@ -53,6 +56,7 @@ def build_model(cfg: ModelConfig) -> ModelDef:
             decode_step=lambda p, c, t: HY.hybrid_decode_step(p, cfg, c, t),
         )
     # dense / moe / ssm / vlm share the LM assembly
+    ragged_ok = cfg.family != "ssm" and not cfg.sliding_window
     return ModelDef(
         cfg=cfg,
         init=lambda rng: LM.init_lm(cfg, rng),
@@ -60,6 +64,9 @@ def build_model(cfg: ModelConfig) -> ModelDef:
         init_cache=lambda bs, ml: LM.init_cache(cfg, bs, ml),
         prefill=lambda p, b, c: LM.lm_prefill(p, cfg, b, c),
         decode_step=lambda p, c, t: LM.lm_decode_step(p, cfg, c, t),
+        prefill_row=(lambda p, b, c, row, t_end:
+                     LM.lm_prefill_row(p, cfg, b, c, row, t_end))
+        if ragged_ok else None,
     )
 
 

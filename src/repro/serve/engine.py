@@ -22,7 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import bucket_for, buckets_for
+from repro.core.plan import BucketGrid, bucket_for, buckets_for, \
+    length_buckets_for
 from repro.core.tsmm import prepack_for
 from repro.models.param import is_axes_leaf
 from repro.sharding.context import sharding_ctx
@@ -35,6 +36,46 @@ log = logging.getLogger(__name__)
 PACKABLE = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_in",
             "w_out", "head", "wq_a", "wq_b", "wkv_a", "wkv_b"}
 MIN_ROWS, MIN_COLS = 512, 512
+
+
+def packable_divisors(path, axes_leaf, leaf, mesh=None,
+                      opts: Optional[ShardingOptions] = None):
+    """The single source of truth for "is this leaf packed, and how is it
+    sharded": returns (rows, cols, row_shards, col_shards) or None.
+
+    Shared by the serving pre-pack (real arrays) and the install sweep's
+    shape enumeration (ShapeDtypeStructs), so the Problem keys both sides
+    produce match by construction."""
+    name = path[-1]
+    if name not in PACKABLE or leaf.ndim < 2 or leaf.ndim > 3:
+        return None
+    if leaf.ndim == 3 and axes_leaf[0] not in ("layers", "groups"):
+        return None
+    rows, cols = leaf.shape[-2:]
+    if rows < MIN_ROWS or cols < MIN_COLS:
+        return None
+    rs = cs = 1
+    if mesh is not None:
+        spec = pspec_for(axes_leaf, leaf.shape, mesh, opts or ShardingOptions())
+        rs = axis_size(mesh, spec[-2]) if spec[-2] else 1
+        cs = axis_size(mesh, spec[-1]) if spec[-1] else 1
+    return rows, cols, rs, cs
+
+
+def iter_packable(params, axes, mesh=None,
+                  opts: Optional[ShardingOptions] = None):
+    """Yield (path, leaf, (rows, cols, rs, cs)) for every packable leaf.
+    ``params`` may hold arrays or ShapeDtypeStructs."""
+    def walk(p, a, path):
+        if isinstance(p, dict):
+            for k in p:
+                yield from walk(p[k], a[k], path + (k,))
+            return
+        d = packable_divisors(path, a, p, mesh, opts)
+        if d is not None:
+            yield path, p, d
+
+    yield from walk(params, axes, ())
 
 
 def pack_tree_for_serving(params, axes, batch_m, mesh=None,
@@ -52,20 +93,14 @@ def pack_tree_for_serving(params, axes, batch_m, mesh=None,
     def walk(p, a, path):
         if isinstance(p, dict):
             return {k: walk(p[k], a[k], path + (k,)) for k in p}
-        name = path[-1]
-        if name not in PACKABLE or p.ndim < 2 or p.ndim > 3:
+        d = packable_divisors(path, a, p, mesh, opts)
+        if d is None:
             return p
-        if p.ndim == 3 and a[0] not in ("layers", "groups"):
-            return p
-        rows, cols = p.shape[-2:]
-        if rows < MIN_ROWS or cols < MIN_COLS:
-            return p
-        rs = cs = 1
-        if mesh is not None:
-            spec = pspec_for(a, p.shape, mesh, opts)
-            rs = axis_size(mesh, spec[-2]) if spec[-2] else 1
-            cs = axis_size(mesh, spec[-1]) if spec[-1] else 1
-        pk = prepack_for(batch_m, p, shard_divisors=(rs, cs))
+        _, _, rs, cs = d
+        # num_shards keys the tuned Problem: a sharded engine must look up
+        # the same registry entries the (sharded) install sweep wrote
+        pk = prepack_for(batch_m, p, num_shards=rs * cs,
+                         shard_divisors=(rs, cs))
         if pk is None:
             return p
         report["/".join(path)] = tuple(pk.blocks.shape)
@@ -108,6 +143,7 @@ class Engine:
                  batch_size: Optional[int] = None,
                  max_batch: Optional[int] = None,
                  buckets: Optional[tuple] = None,
+                 max_prompt: Optional[int] = None, min_prompt: int = 8,
                  mesh=None, opts: Optional[ShardingOptions] = None,
                  prepack: bool = True):
         if max_batch is None:
@@ -130,6 +166,12 @@ class Engine:
             self.buckets = buckets_for(self.max_batch)
         self.batch_size = self.max_batch     # legacy alias
         self.max_len = max_len
+        # 2D admission grid (DESIGN.md §8): ragged prompts pad to a length
+        # bucket; plans / jit programs are keyed (batch-bucket, len-bucket)
+        self.grid = BucketGrid(
+            self.buckets,
+            length_buckets_for(min(max_prompt or max_len, max_len),
+                               min_prompt))
         if prepack:
             params, report = pack_tree_for_serving(
                 params, axes, self.buckets, mesh, self.opts)
@@ -145,6 +187,10 @@ class Engine:
         # recompiles.
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        # ragged admission into a live cache (None for families without an
+        # attention cache): one program per length bucket, any slot/clock
+        self._prefill_row = (jax.jit(model.prefill_row, donate_argnums=(2,))
+                             if model.prefill_row is not None else None)
 
     # -- bucket dispatch ------------------------------------------------
 
@@ -212,20 +258,55 @@ class Engine:
             buckets=(bucket,),
         )
 
+    def ragged_supported(self) -> bool:
+        cfg = self.model.cfg
+        return (self.model.prefill_row is not None
+                and not cfg.embeds_input
+                and not getattr(cfg, "is_encoder_decoder", False))
+
     def serve(self, requests: list, steps: int) -> list:
         """Admission layer over ``generate``: a list of single requests
-        (dicts with 1D ``tokens``) becomes one aligned group.  Prompts must
-        share a length (lockstep decode).  Returns one GenerateResult per
-        request (views into the group result)."""
+        (dicts with 1D ``tokens``) becomes one aligned group.
+
+        Ragged prompt lengths are admitted by left-padding every prompt to
+        the group's length bucket with per-row attention masking
+        (``batch["pad"]``, DESIGN.md §8) — positions stay aligned, so
+        decode remains lockstep.  Returns one GenerateResult per request
+        (views into the group result)."""
         if not requests:
             return []
-        lens = {r["tokens"].shape[-1] for r in requests}
-        if len(lens) != 1:
-            raise ValueError(f"aligned decode needs equal prompt lengths, "
-                             f"got {sorted(lens)}")
+        lens = sorted({int(r["tokens"].shape[-1]) for r in requests})
         keys = requests[0].keys()
-        group = {k: jnp.stack([jnp.asarray(r[k]) for r in requests])
-                 for k in keys}
+        if not self.ragged_supported():
+            if len(lens) != 1:
+                raise ValueError(
+                    f"ragged prompt lengths {lens} need an attention-cache "
+                    f"LM (family={self.model.cfg.family}); pad the prompts "
+                    f"to a common length for this architecture")
+            lb = lens[-1]
+        elif lens[-1] > self.grid.max_prompt:
+            lb = lens[-1]      # beyond the grid: serve at the raw max
+        else:
+            # uniform groups bucket too: one prefill program and one set
+            # of planned token counts per length bucket, not per raw
+            # length (the warm-program / lookup-only contract)
+            lb = self.grid.length_bucket(lens[-1])
+        if len(lens) == 1 and lens[0] == lb:
+            group = {k: jnp.stack([jnp.asarray(r[k]) for r in requests])
+                     for k in keys}
+        else:
+            toks, pads = [], []
+            for r in requests:
+                t = jnp.asarray(r["tokens"])
+                pad = lb - t.shape[-1]
+                toks.append(jnp.pad(t, (pad, 0)))
+                pads.append(pad)
+            group = {"tokens": jnp.stack(toks),
+                     "pad": jnp.asarray(pads, jnp.int32)}
+            for k in keys:
+                if k not in ("tokens", "pad"):
+                    group[k] = jnp.stack([jnp.asarray(r[k])
+                                          for r in requests])
         res = self.generate(group, steps)
         return [GenerateResult(tokens=res.tokens[i:i + 1],
                                logits_last=res.logits_last[i:i + 1],
@@ -233,3 +314,12 @@ class Engine:
                                per_token_s=res.per_token_s,
                                buckets=res.buckets)
                 for i in range(len(requests))]
+
+    def serve_queue(self, requests: list, *, slots: Optional[int] = None):
+        """Continuous batching (DESIGN.md §8): serve a queue of
+        :class:`repro.serve.scheduler.Request`s with *different* prompt
+        lengths and per-request stop state from a fixed slot pool —
+        finished streams free their slot mid-flight and queued requests
+        join the running decode batch.  Returns (results, stats)."""
+        from repro.serve.scheduler import ContinuousScheduler
+        return ContinuousScheduler(self, slots=slots).run(requests)

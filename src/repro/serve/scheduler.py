@@ -1,0 +1,250 @@
+"""Continuous-batching scheduler (DESIGN.md §8).
+
+The bucketed Engine (§7) serves one aligned group at a time: a stream
+that finishes early holds its slot until the whole group drains, and a
+queued request waits for a full drain before it runs — exactly the
+non-regular-shaped-input regime the paper says conventional
+implementations mishandle.  This module adds the in-flight slot pool:
+
+* a fixed decode batch of ``slots`` rows shares ONE cache and ONE
+  compiled decode program (the slot count is snapped to a batch bucket,
+  so the program is warm after the install sweep);
+* every row carries per-slot stop state (EOS / max-new-tokens); a
+  finished stream frees its row immediately;
+* a queued request joins the RUNNING batch through
+  ``model.prefill_row``: its prompt is left-padded to a length bucket
+  and prefilled into the freed row at the scheduler's clock.
+
+Positions use a single global clock ``T`` (the cache's scalar ``pos``):
+a request admitted at clock T occupies absolute positions
+``[T - lb, T)``.  RoPE attention is relative, so the shift leaves the
+stream's logits identical (up to float re-association) to serving it
+alone at position 0; ``valid_from[row]`` masks the left-pad region and
+whatever a previous stream left in the recycled slot.  The clock never
+rewinds, so cache capacity ``max_len`` bounds prompt bucket + total
+decode steps — size ``Engine(max_len=...)`` accordingly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from collections import deque
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.context import sharding_ctx
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued generation request (ragged: any prompt length)."""
+    tokens: object                      # 1D int prompt
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    rid: Optional[object] = None
+
+
+@dataclasses.dataclass
+class StreamResult:
+    rid: object
+    tokens: np.ndarray                  # (n_generated,) int32
+    prompt_len: int
+    length_bucket: int
+    admitted_at: int                    # clock position at admission
+    finished_at: int
+    queue_steps: int                    # decode steps spent waiting
+    completed: bool = True
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Telemetry for one ``run`` (surfaced by ``launch/serve.py --trace``)."""
+    slots: int
+    steps: int = 0                      # lockstep decode steps executed
+    admitted: int = 0
+    completed: int = 0
+    unserved: int = 0                   # ran out of cache capacity
+    prompt_tokens: int = 0              # real prompt tokens prefilled
+    prompt_pad_tokens: int = 0          # left-pad tokens prefilled
+    generated_tokens: int = 0
+    slot_steps_active: int = 0          # sum over steps of live rows
+    queue_steps_total: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots decoding a live stream."""
+        return self.slot_steps_active / max(self.steps * self.slots, 1)
+
+    @property
+    def padding_frac(self) -> float:
+        """Fraction of prefilled prompt tokens that were padding."""
+        total = self.prompt_tokens + self.prompt_pad_tokens
+        return self.prompt_pad_tokens / max(total, 1)
+
+    @property
+    def mean_queue_steps(self) -> float:
+        """Mean decode steps a request waited before admission."""
+        return self.queue_steps_total / max(self.admitted, 1)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    def rows(self) -> list:
+        return [
+            ("slots", self.slots),
+            ("decode_steps", self.steps),
+            ("admitted", self.admitted),
+            ("completed", self.completed),
+            ("unserved", self.unserved),
+            ("generated_tokens", self.generated_tokens),
+            ("prompt_tokens", self.prompt_tokens),
+            ("prompt_pad_tokens", self.prompt_pad_tokens),
+            ("padding_frac", f"{self.padding_frac:.3f}"),
+            ("slot_occupancy", f"{self.occupancy:.3f}"),
+            ("mean_queue_steps", f"{self.mean_queue_steps:.2f}"),
+            ("tokens_per_s", f"{self.tokens_per_s:.1f}"),
+        ]
+
+
+class ContinuousScheduler:
+    """Slot-pool scheduler over a bucketed :class:`~repro.serve.engine.Engine`."""
+
+    def __init__(self, engine, *, slots: Optional[int] = None):
+        if not engine.ragged_supported():
+            raise ValueError(
+                "continuous batching needs an attention-cache LM "
+                f"(family={engine.model.cfg.family}, "
+                f"sliding_window={engine.model.cfg.sliding_window})")
+        self.engine = engine
+        want = slots or engine.max_batch
+        # snap to a batch bucket: the decode program for that batch size
+        # is the one the install sweep planned and pre-pack conforms to
+        self.slots = engine.bucket_of(min(want, engine.max_batch))
+
+    # -- internals ------------------------------------------------------
+
+    def _finished(self, st) -> bool:
+        r, em = st["req"], st["emitted"]
+        return (len(em) >= r.max_new_tokens
+                or (r.eos_id is not None and em and em[-1] == r.eos_id))
+
+    def _retire(self, st, results, free, active, clock, stats, *,
+                completed=True):
+        row = st["row"]
+        results[st["idx"]] = StreamResult(
+            rid=st["req"].rid if st["req"].rid is not None else st["idx"],
+            tokens=np.asarray(st["emitted"], np.int32),
+            prompt_len=st["prompt_len"], length_bucket=st["lb"],
+            admitted_at=st["admitted_at"], finished_at=clock,
+            queue_steps=st["queue_steps"], completed=completed)
+        del active[row]
+        free.append(row)
+        stats.completed += int(completed)
+
+    # -- main loop ------------------------------------------------------
+
+    def run(self, requests: List[Request]):
+        """Serve the whole queue; returns (results, stats) with results in
+        request order."""
+        eng = self.engine
+        B, max_len = self.slots, eng.max_len
+        stats = SchedulerStats(slots=B)
+        reqs = []
+        for r in requests:
+            toks = np.asarray(r.tokens, np.int32).reshape(-1)
+            lb = eng.grid.length_bucket(toks.shape[0])   # raises if too long
+            reqs.append((r, toks, lb))
+        results: list = [None] * len(reqs)
+        if not reqs:
+            return results, stats
+
+        # base clock: the largest length bucket in the queue, so every
+        # admission (at clock >= T0) has room for its prompt below it
+        T = max(lb for _, _, lb in reqs)
+        if T >= max_len:
+            raise ValueError(
+                f"length bucket {T} leaves no decode room in max_len="
+                f"{max_len}; raise Engine(max_len=...)")
+
+        t_wall = time.perf_counter()
+        cache = eng.model.init_cache(B, max_len)
+        cache = dict(cache)
+        cache["pos"] = jnp.asarray(T, jnp.int32)
+        # idle rows attend to nothing until a stream is admitted
+        cache["valid_from"] = jnp.full((B,), max_len, jnp.int32)
+
+        pending = deque(enumerate(reqs))
+        active: dict = {}
+        free = list(range(B))
+        feed = np.zeros((B,), np.int32)       # next token fed per row
+
+        with sharding_ctx(eng.mesh, eng.opts):
+            while pending or active:
+                # -- admission: fill free slots from the queue ----------
+                while free and pending and T < max_len:
+                    idx, (r, toks, lb) = pending.popleft()
+                    row = free.pop()
+                    p = toks.shape[0]
+                    padded = np.zeros((lb,), np.int32)
+                    padded[lb - p:] = toks
+                    batch = {"tokens": jnp.asarray(padded)[None],
+                             "pad": jnp.asarray([lb - p], jnp.int32)}
+                    logits, cache = eng._prefill_row(
+                        eng.params, batch, cache,
+                        jnp.asarray(row, jnp.int32), jnp.asarray(T, jnp.int32))
+                    first = int(jnp.argmax(logits[0, -1]))
+                    st = {"idx": idx, "req": r, "row": row, "lb": lb,
+                          "prompt_len": int(p), "emitted": [first],
+                          "admitted_at": T, "queue_steps": stats.steps}
+                    active[row] = st
+                    feed[row] = first
+                    stats.admitted += 1
+                    stats.prompt_tokens += int(p)
+                    stats.prompt_pad_tokens += lb - p
+                    stats.queue_steps_total += st["queue_steps"]
+                    stats.generated_tokens += 1
+                    if self._finished(st):       # max_new_tokens == 1 / EOS
+                        self._retire(st, results, free, active, T, stats)
+
+                if not active:
+                    break                        # queue empty or out of room
+
+                if T >= max_len:                 # cache full: truncate
+                    for st in list(active.values()):
+                        self._retire(st, results, free, active, T, stats,
+                                     completed=False)
+                    break
+
+                # -- one lockstep decode step over the whole pool -------
+                logits, cache = eng._decode(eng.params, cache,
+                                            jnp.asarray(feed[:, None]))
+                T += 1
+                stats.steps += 1
+                stats.slot_steps_active += len(active)
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+                for row in list(active):
+                    st = active[row]
+                    st["emitted"].append(int(nxt[row]))
+                    feed[row] = nxt[row]
+                    stats.generated_tokens += 1
+                    if self._finished(st):
+                        self._retire(st, results, free, active, T, stats)
+
+        stats.wall_s = time.perf_counter() - t_wall
+        # capacity ran out with requests still queued
+        for idx, (r, toks, lb) in pending:
+            stats.unserved += 1
+            results[idx] = StreamResult(
+                rid=r.rid if r.rid is not None else idx,
+                tokens=np.zeros((0,), np.int32), prompt_len=toks.shape[0],
+                length_bucket=lb, admitted_at=-1, finished_at=-1,
+                queue_steps=stats.steps, completed=False)
+        return results, stats

@@ -32,8 +32,10 @@ def test_plan_set_fill_dispatch_roundtrip():
     for m in (1, 3, 9):
         plan = pset.for_batch(m)
         assert plan.problem.m == bucket_for(m, pset.buckets)
-    # above all buckets -> largest bucket's plan
-    assert pset.for_batch(1000).problem.m == pset.buckets[-1]
+    # above all buckets -> None: a smaller bucket's plan has bm = its own
+    # problem.m and would be mistuned; the caller splits or uses plain GEMM
+    assert pset.for_batch(1000) is None
+    assert PlanSet({}).for_batch(1) is None
     back = PlanSet.from_json(pset.to_json())
     assert back == pset
 
@@ -151,9 +153,14 @@ def test_serve_admission_layer(small_model):
     assert len(outs) == 3
     assert all(o.tokens.shape == (1, 2) for o in outs)
     assert all(o.buckets == (4,) for o in outs)
-    with pytest.raises(ValueError):
-        eng.serve([{"tokens": jnp.zeros(12, jnp.int32)},
-                   {"tokens": jnp.zeros(9, jnp.int32)}], steps=1)
+    # ragged prompt lengths are admitted now (PR 2): left-pad to the
+    # group's length bucket + per-row mask, NOT a ValueError
+    outs = eng.serve([{"tokens": jnp.arange(12, dtype=jnp.int32)},
+                      {"tokens": jnp.arange(9, dtype=jnp.int32)}], steps=2)
+    assert len(outs) == 2
+    assert all(o.tokens.shape == (1, 2) for o in outs)
+    assert all(bool(jnp.isfinite(o.logits_last.astype(jnp.float32)).all())
+               for o in outs)
 
 
 def test_install_then_engine_start_is_lookup_only(small_model, tmp_path,
@@ -180,6 +187,58 @@ def test_install_then_engine_start_is_lookup_only(small_model, tmp_path,
         assert stats["hits"] > 0
     finally:
         registry.clear_memory()
+
+
+def test_sharded_install_then_mesh_engine_all_hit():
+    """num_shards threads from the mesh through pre-pack planning: after a
+    sharded install sweep, a sharded Engine start is registry-hits-only
+    (it used to tune per-shard shapes the sweep never wrote).  Runs in a
+    subprocess so the main pytest process keeps its single-device view."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    from pathlib import Path
+
+    code = textwrap.dedent("""
+        import os, pathlib
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["REPRO_PLAN_CACHE"] = "/tmp/repro_mesh_plans.json"
+        pathlib.Path("/tmp/repro_mesh_plans.json").unlink(missing_ok=True)
+        import jax
+        from repro.configs import get_reduced_config
+        from repro.core import registry
+        from repro.core.install import install_arch, sharded_serving_shapes
+        from repro.core.plan import buckets_for
+        from repro.models.registry import build_model
+        from repro.serve.engine import Engine
+
+        cfg = get_reduced_config("qwen1_5_4b").reduced(
+            d_model=512, d_ff=1024, num_layers=2, vocab_size=1024,
+            num_heads=8, num_kv_heads=8, head_dim=64)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        sharded = sharded_serving_shapes(cfg, mesh)
+        assert any(s > 1 for _, _, s in sharded), sharded
+        registry.clear_memory()
+        install_arch(cfg, buckets_for(8), mesh=mesh)
+        registry.flush()
+        registry.clear_memory()          # fresh process; file must carry it
+        model = build_model(cfg)
+        params, axes = model.init(jax.random.PRNGKey(0))
+        eng = Engine(model, params, axes, max_len=48, max_batch=8,
+                     mesh=mesh, prepack=True)
+        stats = registry.stats()
+        assert len(eng.pack_report) >= 4, eng.pack_report
+        assert stats["misses"] == 0, stats
+        assert stats["hits"] > 0, stats
+        print("MESH_ALL_HIT_OK")
+    """)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    assert "MESH_ALL_HIT_OK" in out.stdout
 
 
 def test_bucketed_benchmark_smoke():

@@ -1,0 +1,282 @@
+"""Continuous batching + ragged admission (DESIGN.md §8): the 2D bucket
+grid, PlanGrid, left-pad masking parity, the slot-pool scheduler, and the
+warm-program (no recompile) contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.autotuner import make_plan_grid
+from repro.core.plan import (BucketGrid, PlanGrid, bucket_for, buckets_for,
+                             is_tsmm, length_buckets_for)
+from repro.serve.engine import Engine
+from repro.serve.scheduler import ContinuousScheduler, Request
+
+
+# ---------------------------------------------------------------------------
+# grid helpers
+# ---------------------------------------------------------------------------
+
+
+def test_length_buckets():
+    assert length_buckets_for(64) == (8, 16, 32, 64)
+    assert length_buckets_for(48) == (8, 16, 32, 48)   # max always a bucket
+    assert length_buckets_for(4) == (4,)               # floor clamps to max
+    assert length_buckets_for(100, min_prompt=16) == (16, 32, 64, 100)
+
+
+def test_bucket_grid():
+    g = BucketGrid.build(max_batch=8, max_prompt=32)
+    assert g.batch == (1, 2, 4, 8) and g.length == (8, 16, 32)
+    assert g.cell_for(3, 9) == (4, 16)
+    assert g.cell_for(8, 32) == (8, 32)        # full cell never pads
+    assert g.cell_for(1, 1) == (1, 8)          # length floor
+    assert g.padding_waste(3, 9) == 4 * 16 - 3 * 9
+    assert set(g.cells()) == {(b, s) for b in g.batch for s in g.length}
+    assert g.token_buckets() == tuple(sorted({b * s for b in g.batch
+                                              for s in g.length}))
+    with pytest.raises(ValueError):
+        g.cell_for(9, 8)                       # batch over the ceiling
+    with pytest.raises(ValueError):
+        g.cell_for(1, 33)                      # prompt over the ceiling
+
+
+def test_make_plan_grid_shares_plans_and_roundtrips():
+    g = BucketGrid.build(max_batch=8, max_prompt=16)
+    pg = make_plan_grid(4096, 128, g, "bfloat16", persist=False)
+    # only TSMM-shaped token counts get plans
+    assert all(is_tsmm(bb * lb, 4096, 128) for bb, lb in pg.plans)
+    # cells with the same token count share ONE plan (one registry entry)
+    assert pg.plans[(1, 16)] is pg.plans[(2, 8)]
+    p = pg.for_request(1, 7)                   # cell (1, 8) -> m=8
+    assert p is not None and p.problem.m == 8
+    # cell (4, 16) -> m=64: not TSMM vs n=128 (ratio < 8) -> plain GEMM
+    assert pg.for_request(3, 9) is None
+    assert pg.for_request(100, 9) is None      # outside the grid
+    back = PlanGrid.from_json(pg.to_json())
+    assert back == pg
+
+
+# ---------------------------------------------------------------------------
+# ragged serving parity (f32 so RoPE-shift float noise cannot flip argmax)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def f32_model():
+    from repro.configs import get_reduced_config
+    from repro.models.registry import build_model
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=512, d_ff=1024, num_layers=2, vocab_size=1024,
+        num_heads=8, num_kv_heads=8, head_dim=64, dtype="float32")
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    return model, params, axes
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 1024, size=n), jnp.int32)
+
+
+def test_uniform_groups_share_the_length_bucket_program(f32_model):
+    """serve() buckets UNIFORM-length groups too: raw lengths 9/11/13 all
+    run the lb=16 prefill program instead of compiling one each (the
+    warm-program contract applies to the length axis, not just batch)."""
+    from repro.models.registry import build_model
+    model, params, axes = f32_model
+    model = build_model(model.cfg)           # fresh lambdas -> fresh jit cache
+    eng = Engine(model, params, axes, max_len=64, max_batch=2, prepack=False)
+    all_outs = {}
+    for n in (9, 11, 13):
+        outs = eng.serve([{"tokens": _prompt(n, seed=n)},
+                          {"tokens": _prompt(n, seed=n + 1)}], steps=2)
+        assert len(outs) == 2
+        all_outs[n] = outs
+    # raw lengths 9/11/13 all share the ONE masked (2, lb=16) program
+    assert eng._prefill._cache_size() == 1
+    # an exact-bucket group skips the pad vector (keeps the TPU flash
+    # path) -> its own program, still per-bucket not per-raw-length
+    all_outs[16] = eng.serve([{"tokens": _prompt(16, seed=16)},
+                              {"tokens": _prompt(16, seed=17)}], steps=2)
+    assert eng._prefill._cache_size() == 2
+    for n, outs in all_outs.items():
+        ref = eng.generate({"tokens": _prompt(n, seed=n)[None]}, steps=2)
+        np.testing.assert_array_equal(np.asarray(outs[0].tokens),
+                                      np.asarray(ref.tokens))
+
+
+def test_ragged_serve_matches_unpadded_reference(f32_model):
+    """serve() now admits UNEQUAL prompt lengths (the PR 1 hard-reject was
+    the bug): left-pad to the group's length bucket + per-row masking must
+    reproduce each request's solo greedy decode exactly."""
+    model, params, axes = f32_model
+    eng = Engine(model, params, axes, max_len=64, max_batch=4, prepack=False)
+    reqs = [{"tokens": _prompt(n, seed=n)} for n in (5, 12, 9, 16)]
+    outs = eng.serve(reqs, steps=4)
+    assert len(outs) == 4
+    for r, o in zip(reqs, outs):
+        ref = eng.generate({"tokens": r["tokens"][None]}, steps=4)
+        np.testing.assert_array_equal(np.asarray(o.tokens),
+                                      np.asarray(ref.tokens))
+
+
+@pytest.mark.parametrize("b,s", [(1, 3), (3, 7), (2, 16), (4, 11)])
+def test_admission_minimal_cell_and_masked_prefill_parity(f32_model, b, s):
+    """For (batch, prompt-len) pairs: admission picks the minimal covering
+    cell, padding waste is bounded by the power-of-two ladders, and the
+    padded+masked prefill logits match the unpadded reference."""
+    model, params, axes = f32_model
+    eng = Engine(model, params, axes, max_len=64, max_batch=4, prepack=False)
+    bb, lb = eng.grid.cell_for(b, s)
+    assert bb >= b and lb >= s
+    assert bb < 2 * b or bb == eng.grid.batch[0]
+    assert lb < 2 * s or lb == eng.grid.length[0]
+    reqs = [{"tokens": _prompt(s, seed=10 * b + i)} for i in range(b)]
+    # force the ragged path even for an aligned group: pad to the bucket
+    padded = [{"tokens": jnp.pad(r["tokens"], (lb - s, 0))} for r in reqs]
+    pad = jnp.full((b,), lb - s, jnp.int32)
+    group = {"tokens": jnp.stack([p["tokens"] for p in padded]), "pad": pad}
+    res = eng.generate(group, steps=2)
+    ref = eng.generate({"tokens": jnp.stack([r["tokens"] for r in reqs])},
+                       steps=2)
+    np.testing.assert_array_equal(np.asarray(res.tokens),
+                                  np.asarray(ref.tokens))
+    np.testing.assert_allclose(np.asarray(res.logits_last, np.float32),
+                               np.asarray(ref.logits_last, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the slot-pool scheduler
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_recycles_slots_and_matches_reference(f32_model):
+    """The acceptance scenario: a queue of requests with DIFFERENT prompt
+    lengths and decode budgets is served from a fixed slot pool; streams
+    that finish early free their slot for queued requests (no group
+    drain), and every stream's tokens equal its solo greedy decode."""
+    model, params, axes = f32_model
+    eng = Engine(model, params, axes, max_len=128, max_batch=2, prepack=False)
+    spec = [(5, 4), (12, 2), (20, 6), (9, 3), (3, 5)]
+    reqs = [Request(tokens=_prompt(n, seed=n), max_new_tokens=m, rid=i)
+            for i, (n, m) in enumerate(spec)]
+    results, stats = eng.serve_queue(reqs)
+    assert [r.rid for r in results] == list(range(5))
+    assert stats.admitted == stats.completed == 5 and stats.unserved == 0
+    # only 2 slots: later requests joined a RUNNING batch, not a fresh one
+    assert max(r.admitted_at for r in results) > min(r.admitted_at
+                                                     for r in results)
+    assert stats.queue_steps_total > 0
+    for r, (n, m) in zip(results, spec):
+        assert r.completed and len(r.tokens) == m
+        ref = eng.generate({"tokens": _prompt(n, seed=n)[None]}, steps=m)
+        np.testing.assert_array_equal(r.tokens, np.asarray(ref.tokens[0]))
+    # telemetry invariants
+    assert 0 < stats.occupancy <= 1
+    assert stats.prompt_tokens == sum(n for n, _ in spec)
+    assert stats.generated_tokens == sum(m for _, m in spec)
+    assert stats.prompt_pad_tokens == sum(
+        eng.grid.length_bucket(n) - n for n, _ in spec)
+
+
+def test_scheduler_eos_stops_stream(f32_model):
+    model, params, axes = f32_model
+    eng = Engine(model, params, axes, max_len=96, max_batch=2, prepack=False)
+    probe, _ = eng.serve_queue([Request(tokens=_prompt(9, seed=1),
+                                        max_new_tokens=6)])
+    assert len(probe[0].tokens) == 6
+    toks = list(map(int, probe[0].tokens))
+    # replay with an EOS whose FIRST occurrence is mid-stream
+    k = next(i for i in range(1, len(toks)) if toks[i] not in toks[:i])
+    res, stats = eng.serve_queue([Request(tokens=_prompt(9, seed=1),
+                                          max_new_tokens=6,
+                                          eos_id=toks[k])])
+    assert len(res[0].tokens) == k + 1 and int(res[0].tokens[-1]) == toks[k]
+    np.testing.assert_array_equal(res[0].tokens, probe[0].tokens[:k + 1])
+
+
+def test_scheduler_no_recompile_once_warm(f32_model):
+    """Different prompt lengths must reuse the (batch-bucket x
+    length-bucket) programs once warm: second queue adds no compilations."""
+    from repro.models.registry import build_model
+    model, params, axes = f32_model
+    model = build_model(model.cfg)           # fresh lambdas -> fresh jit cache
+    eng = Engine(model, params, axes, max_len=128, max_batch=2, prepack=False)
+    reqs = [Request(tokens=_prompt(n, seed=n), max_new_tokens=2, rid=n)
+            for n in (3, 9, 14, 30)]         # buckets 8, 16, 16, 32
+    before = eng._prefill_row._cache_size()
+    eng.serve_queue(reqs)
+    n_prefill = eng._prefill_row._cache_size()
+    n_decode = eng._decode._cache_size()
+    # one program per length bucket hit (8, 16, 32), any slot/clock
+    assert n_prefill - before == 3
+    reqs2 = [Request(tokens=_prompt(n, seed=n + 50), max_new_tokens=3,
+                     rid=n) for n in (5, 11, 25, 16, 2)]
+    eng.serve_queue(reqs2)
+    assert eng._prefill_row._cache_size() == n_prefill
+    assert eng._decode._cache_size() == n_decode
+
+
+def test_scheduler_rejects_unsupported_families(f32_model):
+    from repro.configs import get_reduced_config
+    from repro.models.registry import build_model
+    cfg = get_reduced_config("zamba2_2_7b")
+    model = build_model(cfg)
+    assert model.cfg.family in ("ssm", "hybrid") or model.prefill_row is None
+    params, axes = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, axes, max_len=32, max_batch=2, prepack=False)
+    with pytest.raises(ValueError):
+        ContinuousScheduler(eng)
+    with pytest.raises(ValueError):
+        eng.serve([{"tokens": jnp.zeros(12, jnp.int32)},
+                   {"tokens": jnp.zeros(9, jnp.int32)}], steps=1)
+
+
+def test_scheduler_capacity_truncation(f32_model):
+    """When the clock hits max_len the scheduler truncates live streams
+    (completed=False) and reports unserved queue entries instead of
+    crashing or rewinding the cache."""
+    model, params, axes = f32_model
+    eng = Engine(model, params, axes, max_len=20, max_batch=1, prepack=False)
+    reqs = [Request(tokens=_prompt(9, seed=i), max_new_tokens=50, rid=i)
+            for i in range(2)]
+    results, stats = eng.serve_queue(reqs)
+    assert not results[0].completed and len(results[0].tokens) > 0
+    assert stats.unserved == 1 and not results[1].completed
+    assert len(results[1].tokens) == 0
+
+
+def test_benchmark_smoke():
+    from benchmarks.continuous_batching import run
+    rows = run(n_requests=4, max_batch=2, repeats=1)
+    names = [r[0] for r in rows]
+    assert "ragged_tokens_per_s" in names and "ragged_vs_aligned" in names
+
+
+def test_install_check_covers_grid(tmp_path, monkeypatch):
+    """install over the 2D grid, then a fresh-memory re-sweep is all hits
+    (the --check contract CI runs)."""
+    from repro.configs import get_reduced_config
+    from repro.core.install import install_arch, serving_problems
+
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=512, d_ff=1024, num_layers=2, vocab_size=1024,
+        num_heads=8, num_kv_heads=8, head_dim=64)
+    buckets = buckets_for(4)
+    lengths = length_buckets_for(32)
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans.json"))
+    registry.clear_memory()
+    try:
+        n = install_arch(cfg, buckets, lengths)
+        registry.flush()
+        assert n == len(serving_problems(cfg, buckets, lengths)) > 0
+        registry.clear_memory()              # fresh process, warm file
+        install_arch(cfg, buckets, lengths)
+        stats = registry.stats()
+        assert stats["misses"] == 0 and stats["hits"] > 0, stats
+    finally:
+        registry.clear_memory()

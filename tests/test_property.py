@@ -1,5 +1,7 @@
 """Hypothesis property tests on system invariants."""
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +14,7 @@ from hypothesis import given, settings
 from repro.core import registry
 from repro.core.autotuner import candidate_blocks, make_plan
 from repro.core.hw import TPU_V5E, VMEM_USABLE_FRACTION
-from repro.core.plan import Problem, is_tsmm
+from repro.core.plan import BucketGrid, Problem, is_tsmm
 from repro.core.vmem_model import feasible, vmem_bytes_needed
 from repro.kernels import ops, ref
 from repro.sharding.rules import SKINNY_MIN_PER_SHARD, pspec_for, ShardingOptions
@@ -121,6 +123,83 @@ def test_tsmm_matches_ref_property(m, k, n):
     want = ref.tsmm_ref(x, w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# the 2D bucket grid (ragged admission, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+grid_st = st.builds(BucketGrid.build, st.integers(1, 256),
+                    st.integers(1, 4096))
+
+
+@SET
+@given(grid_st, st.integers(1, 256), st.integers(1, 4096))
+def test_grid_admission_minimal_and_waste_bounded(grid, b, s):
+    if b > grid.max_batch or s > grid.max_prompt:
+        with pytest.raises(ValueError):
+            grid.cell_for(b, s)
+        return
+    bb, lb = grid.cell_for(b, s)
+    # covering
+    assert bb >= b and lb >= s
+    assert bb in grid.batch and lb in grid.length
+    # minimal: no smaller bucket on either axis covers the request
+    assert all(x < b for x in grid.batch if x < bb)
+    assert all(x < s for x in grid.length if x < lb)
+    # power-of-two ladders bound the waste: each axis pads < 2x except at
+    # its floor bucket
+    assert bb < 2 * b or bb == grid.batch[0]
+    assert lb < 2 * s or lb == grid.length[0]
+    waste = grid.padding_waste(b, s)
+    assert 0 <= waste == bb * lb - b * s
+    assert bb * lb <= max(4 * b * s, 2 * b * grid.length[0],
+                          2 * s * grid.batch[0], grid.batch[0] * grid.length[0])
+
+
+@SET
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_grid_cells_cover_every_admissible_request(mb, mp):
+    grid = BucketGrid.build(mb, mp)
+    cells = set(grid.cells())
+    for b in range(1, mb + 1):
+        for s in range(1, mp + 1):
+            assert grid.cell_for(b, s) in cells
+    assert grid.token_buckets()[-1] == grid.max_batch * grid.max_prompt
+
+
+@functools.lru_cache(maxsize=1)
+def _ragged_engine():
+    from repro.configs import get_reduced_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import Engine
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=256, d_ff=512, num_layers=2, vocab_size=512,
+        num_heads=4, num_kv_heads=4, head_dim=64, dtype="float32")
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    return cfg, Engine(model, params, axes, max_len=64, max_batch=4,
+                       prepack=False)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 24), st.integers(1, 3))
+def test_ragged_decode_matches_unpadded_reference(b, s, steps):
+    """End-to-end grid property: a RAGGED group (mixed prompt lengths,
+    left-padded to its length bucket with per-row masking) decodes the
+    SAME tokens as each request's unpadded solo reference (f32 model so
+    RoPE-shift float noise cannot flip an argmax)."""
+    cfg, eng = _ragged_engine()
+    rng = np.random.default_rng(b * 1000 + s * 10 + steps)
+    lens = [s if i % 2 == 0 else max(1, s // 2) for i in range(b)]
+    reqs = [{"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=n), jnp.int32)} for n in lens]
+    outs = eng.serve(reqs, steps=steps)
+    for r, o in zip(reqs, outs):
+        ref = eng.generate({"tokens": r["tokens"][None]}, steps=steps)
+        np.testing.assert_array_equal(np.asarray(o.tokens),
+                                      np.asarray(ref.tokens))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,84 @@
+"""Registry concurrency: two launchers sharing one cache file must not
+clobber each other's plans (the NFS pod-slice contract in
+core/registry.py's docstring)."""
+
+import json
+
+import pytest
+
+from repro.core import registry
+from repro.core.plan import Plan, Problem
+
+
+def _plan(m: int) -> Plan:
+    return Plan(Problem(m, 4096, 128), "skinny_a", bm=m, bk=512, bn=128)
+
+
+def _disk(path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.fixture
+def cache_file(tmp_path, monkeypatch):
+    path = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(path))
+    registry.clear_memory()
+    yield path
+    registry.clear_memory()
+
+
+def test_two_writers_do_not_lose_plans(cache_file):
+    """Writer A loads the (empty) cache early; writer B flushes its plan;
+    A's later flush must MERGE B's on-disk plan, not overwrite the file
+    with only A's memory."""
+    assert registry.get("m1_k4096_n128_bfloat16_s1") is None  # A loads early
+
+    # writer B (separate process): persisted a plan after A's load
+    plan_b = _plan(2)
+    cache_file.write_text(json.dumps(
+        {registry._key(plan_b.problem.key()): plan_b.to_json()}))
+
+    plan_a = _plan(1)
+    registry.put(plan_a, persist=True)       # A's flush
+
+    disk = _disk(cache_file)
+    assert registry._key(plan_a.problem.key()) in disk
+    assert registry._key(plan_b.problem.key()) in disk, \
+        "writer A clobbered writer B's plan"
+    # and the merge is visible to A's own lookups without a reload
+    got = registry.get(plan_b.problem.key())
+    assert got == plan_b
+
+
+def test_conflicting_key_local_memory_wins(cache_file):
+    """Same key on disk and in memory: our (freshest) tuning wins."""
+    registry.get("warmup")                   # force the early load
+    stale = _plan(4)
+    cache_file.write_text(json.dumps(
+        {registry._key(stale.problem.key()): stale.to_json()}))
+    import dataclasses
+    fresh = dataclasses.replace(stale, bk=1024, chosen_by="measured")
+    registry.put(fresh, persist=True)
+    disk = _disk(cache_file)
+    assert Plan.from_json(disk[registry._key(stale.problem.key())]) == fresh
+
+
+def test_flush_merges_even_without_local_misses(cache_file):
+    """flush() after put(persist=False) — the bulk install path — also
+    merges concurrent writes."""
+    registry.get("warmup")
+    other = _plan(8)
+    cache_file.write_text(json.dumps(
+        {registry._key(other.problem.key()): other.to_json()}))
+    registry.put(_plan(16), persist=False)
+    registry.flush()
+    disk = _disk(cache_file)
+    assert len(disk) == 2
+
+
+def test_corrupt_disk_is_ignored_on_merge(cache_file):
+    registry.get("warmup")
+    cache_file.write_text("{not json")
+    registry.put(_plan(32), persist=True)    # must not raise
+    assert len(_disk(cache_file)) == 1
