@@ -74,7 +74,11 @@ def run_ragged(eng, reqs):
 
 
 def run_aligned(eng, reqs, max_prompt_bucket: int):
-    """PR 1 discipline: global-max padding + group-drain decode."""
+    """PR 1 discipline: global-max padding + group-drain decode.
+
+    Returns warm wall time: first-invocation jit time is subtracted via
+    GenerateResult.compile_s, the same split the ragged scheduler's
+    stats.compile_s applies — both disciplines are compared warm."""
     wall = 0.0
     toks = 0
     for lo in range(0, len(reqs), eng.max_batch):
@@ -86,7 +90,7 @@ def run_aligned(eng, reqs, max_prompt_bucket: int):
         t0 = time.perf_counter()
         outs = eng.serve(padded, steps=steps)
         jax.block_until_ready([o.tokens for o in outs])
-        wall += time.perf_counter() - t0
+        wall += time.perf_counter() - t0 - outs[0].compile_s
         toks += sum(r.max_new_tokens for r in group)   # useful tokens only
     return toks, wall
 
@@ -107,16 +111,22 @@ def run(n_requests: int = 16, max_batch: int = 4, repeats: int = 2):
         r_toks, r_wall, stats = run_ragged(eng, reqs)
         a_toks, a_wall = run_aligned(eng, reqs, pbucket)
 
-    r_tps, a_tps = r_toks / r_wall, a_toks / a_wall
+    # warm throughput: any first-invocation jit time the scheduler saw on
+    # the timed repeat is split out (compile_s ~ 0 once programs are warm)
+    r_tps = r_toks / max(r_wall - stats.compile_s, 1e-9)
+    a_tps = a_toks / a_wall
     pad_aligned = sum(pbucket - l for l in lens)
     pad_ragged = stats.prompt_pad_tokens
     rows = [
         ("ragged_tokens_per_s", f"{r_tps:.1f}",
-         f"{r_toks} tokens in {r_wall*1e3:.0f}ms, "
+         f"{r_toks} tokens in {r_wall*1e3:.0f}ms warm, "
          f"occupancy={stats.occupancy:.2f}, "
          f"mean_queue_steps={stats.mean_queue_steps:.1f}"),
+        ("ragged_compile_s", f"{stats.compile_s:.3f}",
+         "first-invocation jit time on the timed repeat, excluded from "
+         "warm throughput"),
         ("aligned_tokens_per_s", f"{a_tps:.1f}",
-         f"{a_toks} tokens in {a_wall*1e3:.0f}ms, all prompts padded "
+         f"{a_toks} tokens in {a_wall*1e3:.0f}ms warm, all prompts padded "
          f"to {pbucket}"),
         ("ragged_vs_aligned", f"{r_tps / a_tps:.2f}x",
          f"target >= 1.2x (ISSUE 2 acceptance)"),

@@ -11,6 +11,12 @@ Mirrors the paper's two stages:
   Plan.  Two search patterns, straight from the paper §IV-A-1:
   pattern A searches downward from the VMEM bound in inner-kernel-sized
   steps; pattern B takes the largest power of two under the bound.
+
+The measured path is an **adaptive short-list search** (DESIGN.md §9):
+candidates are pruned by the (optionally calibrated) predictive model,
+then measured in rank order with cached-measurement reuse, stopping
+early once the wall-clock leader has survived ``stable`` consecutive
+challengers — the model proposes, the stopwatch disposes.
 """
 
 from __future__ import annotations
@@ -27,6 +33,23 @@ from repro.core.vmem_model import feasible, predict
 
 log = logging.getLogger(__name__)
 
+# The hardware model trace-time planning ranks against.  The serving
+# engine swaps in a calibrated spec (fitted from the measurement cache)
+# so registry misses inside jit traces are ranked by measured reality,
+# not the datasheet — the "measure -> model -> plan" loop closed.
+_DEFAULT_HW: HwSpec = TPU_V5E
+
+
+def default_hw() -> HwSpec:
+    return _DEFAULT_HW
+
+
+def set_default_hw(hw: HwSpec) -> HwSpec:
+    """Install ``hw`` as the planning default; returns the previous one."""
+    global _DEFAULT_HW
+    prev, _DEFAULT_HW = _DEFAULT_HW, hw
+    return prev
+
 
 def _pow2_below(x: int) -> int:
     p = 1
@@ -39,8 +62,10 @@ def _ceil_to(x: int, q: int) -> int:
     return -(-x // q) * q
 
 
-def candidate_blocks(problem: Problem, hw: HwSpec = TPU_V5E) -> list[Plan]:
+def candidate_blocks(problem: Problem,
+                     hw: Optional[HwSpec] = None) -> list[Plan]:
     """Enumerate feasible candidate plans for one problem."""
+    hw = hw or default_hw()
     orientation = "tall_a" if problem.skinny_dim == "n" else "skinny_a"
     sl = hw.sublane.get(problem.dtype, 8)
     cands: list[Plan] = []
@@ -70,19 +95,56 @@ def candidate_blocks(problem: Problem, hw: HwSpec = TPU_V5E) -> list[Plan]:
     return out
 
 
+def _measure_short_list(cands: list, *, top_k: int, stable: int,
+                        iters: int, warmup: int) -> Plan:
+    """Adaptive evaluator stage (DESIGN.md §9): measure the model-ranked
+    short-list in order, reusing cached records, and stop once the
+    wall-clock leader has beaten ``stable`` challengers in a row."""
+    from repro.core.evaluator import measure_plan  # lazy: avoids cycle
+    reg = registry.default()
+    best, best_rec, streak, tried = None, None, 0, 0
+    for plan in cands[:max(top_k, 1)]:
+        rec = reg.lookup_measurement(plan)
+        if rec is None:
+            rec = measure_plan(plan, warmup=warmup, iters=iters, reg=reg,
+                               source="autotuner")
+        tried += 1
+        if best_rec is None or rec.seconds < best_rec.seconds:
+            best, best_rec, streak = plan, rec, 0
+        else:
+            streak += 1
+        if tried >= 2 and streak >= stable:
+            break
+    log.info("evaluator: measured %d/%d candidates (leader stable after %d)",
+             tried, len(cands), streak)
+    return dataclasses.replace(best, score=best_rec.seconds,
+                               chosen_by="measured")
+
+
 def make_plan(
     problem: Problem,
-    hw: HwSpec = TPU_V5E,
+    hw: Optional[HwSpec] = None,
     *,
     measure: Optional[str] = None,   # None -> model only; "wallclock" -> evaluate
     top_k: int = 3,
+    stable: int = 2,
+    iters: int = 5,
+    warmup: int = 2,
     persist: bool = True,
     impl: str = "auto",
+    force: bool = False,
 ) -> Plan:
-    """Runtime-stage entry: cached plan or fresh tune."""
-    cached = registry.get(problem.key())
-    if cached is not None:
-        return cached
+    """Runtime-stage entry: cached plan or fresh tune.
+
+    ``force`` skips the registry lookup and re-tunes (the calibrated
+    re-rank pass and the background tuner) — the registry's provenance
+    guard still keeps an existing measured winner over a model-ranked
+    challenger, and ``put`` returns whichever plan actually stands."""
+    hw = hw or default_hw()
+    if not force:
+        cached = registry.get(problem.key())
+        if cached is not None:
+            return cached
 
     cands = candidate_blocks(problem, hw)
     if not cands:
@@ -93,16 +155,15 @@ def make_plan(
                  impl="xla", prepack=False),
             hw,
         )
-        registry.put(plan, persist=persist)
-        return plan
+        return registry.put(plan, persist=persist)
 
-    best = cands[0]
     if measure == "wallclock":
-        from repro.core.evaluator import measure_plans  # lazy: avoids cycle
-        best = measure_plans(cands[:top_k])
-    best = dataclasses.replace(best, impl=impl,
-                               chosen_by="measured" if measure else "model")
-    registry.put(best, persist=persist)
+        best = _measure_short_list(cands, top_k=top_k, stable=stable,
+                                   iters=iters, warmup=warmup)
+    else:
+        best = cands[0]
+    best = dataclasses.replace(best, impl=impl)
+    best = registry.put(best, persist=persist)
     log.info("autotuned %s", best)
     return best
 
@@ -121,11 +182,13 @@ def make_plan_set(
     buckets: tuple,
     dtype: str = "bfloat16",
     num_shards: int = 1,
-    hw: HwSpec = TPU_V5E,
+    hw: Optional[HwSpec] = None,
     *,
     measure: Optional[str] = None,
     persist: bool = True,
     impl: str = "auto",
+    iters: int = 5,
+    force: bool = False,
 ) -> PlanSet:
     """Per-bucket plans for one (k, n) weight shape (DESIGN.md §7).
 
@@ -141,8 +204,12 @@ def make_plan_set(
         if not is_tsmm(m, k, n):
             continue
         plans[m] = make_plan(Problem(m, k, n, dtype, num_shards), hw,
-                             measure=measure, persist=False, impl=impl)
-    if persist and registry.stats()["misses"] > misses_before:
+                             measure=measure, persist=False, impl=impl,
+                             iters=iters, force=force)
+    # force-mode re-tunes bypass the lookup, so the miss counter cannot
+    # be the write trigger for them
+    tuned = (force and plans) or registry.stats()["misses"] > misses_before
+    if persist and tuned:
         registry.flush()
     return PlanSet(plans)
 
@@ -153,11 +220,13 @@ def make_plan_grid(
     grid: BucketGrid,
     dtype: str = "bfloat16",
     num_shards: int = 1,
-    hw: HwSpec = TPU_V5E,
+    hw: Optional[HwSpec] = None,
     *,
     measure: Optional[str] = None,
     persist: bool = True,
     impl: str = "auto",
+    iters: int = 5,
+    force: bool = False,
 ) -> PlanGrid:
     """Per-cell prefill plans for one (k, n) shape over a 2D bucket grid
     (DESIGN.md §8).
@@ -171,9 +240,11 @@ def make_plan_grid(
         if not is_tsmm(m, k, n):
             continue
         by_tokens[m] = make_plan(Problem(m, k, n, dtype, num_shards), hw,
-                                 measure=measure, persist=False, impl=impl)
+                                 measure=measure, persist=False, impl=impl,
+                                 iters=iters, force=force)
     plans = {cell: by_tokens[cell[0] * cell[1]] for cell in grid.cells()
              if cell[0] * cell[1] in by_tokens}
-    if persist and registry.stats()["misses"] > misses_before:
+    tuned = (force and by_tokens) or registry.stats()["misses"] > misses_before
+    if persist and tuned:
         registry.flush()
     return PlanGrid(grid, plans)

@@ -27,6 +27,17 @@ class HwSpec:
     sublane: dict = dataclasses.field(
         default_factory=lambda: {"float32": 8, "bfloat16": 16, "float64": 4}
     )
+    # Calibrated roofline coefficients (DESIGN.md §9).  The nominal spec
+    # above is the datasheet; these scale it to what the measurement cache
+    # actually observed: effective bandwidth = hbm_bw * hbm_efficiency,
+    # effective compute = peak_flops * mxu_efficiency, plus a fitted
+    # per-grid-step overhead.  ``core/evaluator.fit_hw`` fills them via
+    # least squares; ``calibrated`` marks a fitted spec (the predictive
+    # model switches from the max-roofline to the fitted additive form).
+    mxu_efficiency: float = 1.0
+    hbm_efficiency: float = 1.0
+    grid_overhead_s: float = 1.5e-7
+    calibrated: bool = False
 
     @property
     def peak_flops_f32(self) -> float:

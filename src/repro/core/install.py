@@ -1,7 +1,9 @@
 """Install-time stage CLI — the paper's 'assembly kernel selector' run
 once per machine/platform.
 
-    PYTHONPATH=src python -m repro.core.install [--measure] [--archs a,b]
+    PYTHONPATH=src python -m repro.core.install [--measure] [--calibrate]
+                                                [--archs a,b] [--iters N]
+                                                [--shapes N]
                                                 [--max-batch N]
                                                 [--max-prompt S]
                                                 [--mesh data=4,model=2]
@@ -18,7 +20,13 @@ bucket grid (DESIGN.md §8):
 
 A subsequent Engine start is then registry lookups only — the runtime
 stage never tunes.  With ``--measure`` the performance evaluator times the
-short-list (wall-clock; on TPU this times the Pallas kernels).  With
+model-ranked short-list (adaptive early stop; wall-clock; on TPU this
+times the Pallas kernels), recording every timing into the persistent
+measurement cache so repeated sweeps reuse old records.  With
+``--calibrate`` the roofline coefficients are least-squares fitted from
+that cache (DESIGN.md §9) and the whole sweep is RE-RANKED under the
+calibrated model — measured winners are preserved by the registry's
+provenance guard, while every un-measured shape inherits the fit.  With
 ``--check`` the sweep runs against a fresh in-memory registry and FAILS if
 any lookup misses — the CI contract that a warm cache file fully covers
 the serving path.
@@ -128,12 +136,16 @@ def serving_problems(cfg, buckets: tuple = SERVE_BUCKETS,
 
 def install_arch(cfg, buckets: tuple = SERVE_BUCKETS,
                  lengths: tuple = (), *, mesh=None, opts=None,
-                 measure: bool = False) -> int:
+                 measure: bool = False, hw=None, iters: int = 5,
+                 limit_shapes: int = 0, force: bool = False) -> int:
     """Sweep one arch's serving shapes over the bucket grid.  Plans land
     in the in-memory registry; the caller flushes once (bulk write).
 
     With ``mesh`` the per-shard shapes of every packable leaf are swept
     too (num_shards-keyed), so a sharded Engine start is also lookup-only.
+    ``hw``/``force`` drive the calibrated re-rank pass (re-tune every
+    problem under a fitted HwSpec; the registry keeps measured winners);
+    ``limit_shapes`` caps the (k, n) shapes per arch for tiny CI sweeps.
     """
     n_plans = 0
     mm = "wallclock" if measure else None
@@ -141,20 +153,24 @@ def install_arch(cfg, buckets: tuple = SERVE_BUCKETS,
     if mesh is not None:
         shard_shapes = {s for s in sharded_serving_shapes(cfg, mesh, opts)
                         if s[2] > 1}
-    for (k, n) in sorted(serving_shapes(cfg)):
-        pset = make_plan_set(k, n, buckets, cfg.dtype, measure=mm,
-                             persist=False)
+    shapes = sorted(serving_shapes(cfg))
+    if limit_shapes:
+        shapes = shapes[:limit_shapes]
+    for (k, n) in shapes:
+        pset = make_plan_set(k, n, buckets, cfg.dtype, hw=hw, measure=mm,
+                             persist=False, iters=iters, force=force)
         n_plans += len(pset.plans)
         if lengths:
             grid = BucketGrid(tuple(buckets), tuple(lengths))
-            pg = make_plan_grid(k, n, grid, cfg.dtype, measure=mm,
-                                persist=False)
+            pg = make_plan_grid(k, n, grid, cfg.dtype, hw=hw, measure=mm,
+                                persist=False, iters=iters, force=force)
             # cells sharing a token count share a plan; count distinct
             n_plans += len({p.problem.m for p in pg.plans.values()
                             if p.problem.m not in buckets})
     for (ks, ns, s) in sorted(shard_shapes):
-        pset = make_plan_set(ks, ns, buckets, cfg.dtype, num_shards=s,
-                             measure=mm, persist=False)
+        pset = make_plan_set(ks, ns, buckets, cfg.dtype, num_shards=s, hw=hw,
+                             measure=mm, persist=False, iters=iters,
+                             force=force)
         n_plans += len(pset.plans)
     return n_plans
 
@@ -162,7 +178,19 @@ def install_arch(cfg, buckets: tuple = SERVE_BUCKETS,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--measure", action="store_true",
-                    help="wall-clock the short-list (evaluator stage)")
+                    help="wall-clock the short-list (evaluator stage; "
+                         "records land in the persistent measurement "
+                         "cache and are reused across runs)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="least-squares fit the roofline coefficients "
+                         "from the measurement cache and re-rank the "
+                         "whole sweep under the calibrated model "
+                         "(measured winners are preserved)")
+    ap.add_argument("--iters", type=int, default=5,
+                    help="timed iterations per measured candidate")
+    ap.add_argument("--shapes", type=int, default=0,
+                    help="cap (k, n) serving shapes per arch "
+                         "(0 = all; for tiny CI measure sweeps)")
     ap.add_argument("--archs", default="")
     ap.add_argument("--max-batch", type=int, default=MAX_SERVE_BATCH,
                     help="largest serving batch; buckets are powers of two "
@@ -194,7 +222,8 @@ def main(argv=None):
     for arch in archs:
         cfg = get_config(arch)
         n = install_arch(cfg, buckets, lengths, mesh=mesh,
-                         measure=args.measure)
+                         measure=args.measure, iters=args.iters,
+                         limit_shapes=args.shapes)
         if not args.check:
             registry.flush()   # one write per arch: an interrupted sweep
         n_plans += n           # (a killed --measure run) keeps its work
@@ -210,6 +239,34 @@ def main(argv=None):
         print(f"check ok: {stats['hits']} lookups, all hits "
               f"-> {cache_path()}")
         return
+
+    if args.calibrate:
+        from repro.core.evaluator import MIN_FIT_RECORDS, calibrated_hw
+        from repro.core.hw import TPU_V5E
+        hw_cal = calibrated_hw(TPU_V5E)
+        n_rec = len(registry.measurements())
+        if not hw_cal.calibrated:
+            if n_rec < MIN_FIT_RECORDS:
+                print(f"calibrate: only {n_rec} cached measurements "
+                      f"(need >= {MIN_FIT_RECORDS}) — skipped; run with "
+                      f"--measure first")
+            else:
+                print(f"calibrate: fit over {n_rec} measurements is "
+                      f"degenerate (collinear roofline features) — "
+                      f"skipped; measure a more shape-diverse sweep")
+        else:
+            print(f"calibrated from {n_rec} measurements: "
+                  f"eff_hbm={hw_cal.hbm_bw * hw_cal.hbm_efficiency/1e9:.2f}GB/s "
+                  f"(x{hw_cal.hbm_efficiency:.3g}) "
+                  f"mxu_eff=x{hw_cal.mxu_efficiency:.3g} "
+                  f"grid_overhead={hw_cal.grid_overhead_s:.3g}s")
+            for arch in archs:
+                install_arch(get_config(arch), buckets, lengths, mesh=mesh,
+                             measure=False, hw=hw_cal, force=True,
+                             limit_shapes=args.shapes)
+            registry.flush()
+            print("re-ranked sweep under the calibrated model "
+                  "(measured winners preserved)")
 
     print(f"\ninstalled {n_plans} execution plans over buckets {buckets} "
           f"x lengths {lengths or '(none)'} in {time.time()-t0:.1f}s "

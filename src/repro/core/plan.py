@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import re
 from typing import Mapping, Optional
 
 
@@ -39,6 +40,16 @@ class Problem:
 
     def key(self) -> str:
         return f"m{self.m}_k{self.k}_n{self.n}_{self.dtype}_s{self.num_shards}"
+
+    @staticmethod
+    def from_key(key: str) -> "Problem":
+        """Inverse of :meth:`key` — lets the registry's miss log hand a
+        re-tunable Problem to the background tuner (DESIGN.md §9)."""
+        m = re.fullmatch(r"m(\d+)_k(\d+)_n(\d+)_([A-Za-z0-9]+)_s(\d+)", key)
+        if m is None:
+            raise ValueError(f"not a Problem key: {key!r}")
+        return Problem(int(m.group(1)), int(m.group(2)), int(m.group(3)),
+                       m.group(4), int(m.group(5)))
 
 
 # A problem is "tall-and-skinny" when one output dim is at most this and the
@@ -77,6 +88,13 @@ class Plan:
         if self.orientation == "tall_a":
             return (-(-p.m // self.bm), -(-p.k // self.bk))
         return (-(-p.n // self.bn), -(-p.k // self.bk))
+
+    def tuning_key(self) -> str:
+        """The tunable-choice part of a plan's identity — what the
+        measurement cache is keyed by (together with the problem key):
+        two plans with the same tuning key execute the same program."""
+        return (f"{self.orientation}_bm{self.bm}_bk{self.bk}_bn{self.bn}"
+                f"_pp{int(self.prepack)}_{self.impl}")
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)

@@ -1,15 +1,36 @@
-"""Persistent plan registry — the install-time artifact.
+"""Persistent plan + measurement registry — the install-time artifact.
 
 The paper persists its execution plans so that repeated runs skip tuning
 ("the execution plan will be repeatedly executed and the overhead of
-AutoTSMM will be negligible").  We keep a JSON file keyed by
-``platform/problem.key()`` with atomic writes so concurrent launchers on a
-pod slice can share one cache over NFS.
+AutoTSMM will be negligible").  A :class:`Registry` keeps two JSON files
+with atomic writes so concurrent launchers on a pod slice can share one
+cache over NFS:
+
+* **plans** — keyed ``platform/problem.key()``, one winning Plan each.
+  On key conflicts a *measured* plan always beats a model-ranked one
+  (provenance guard): a calibrated re-rank can never silently overwrite
+  a wall-clocked winner with a model-ranked loser.
+* **measurements** — keyed ``platform/problem.key()/plan.tuning_key()``,
+  one :class:`MeasureRecord` (min-of-iters seconds, iteration count,
+  dispersion, provenance) per timed candidate.  This is the evaluator's
+  cache: repeated ``--measure`` sweeps reuse old timings, and the
+  calibration fit (DESIGN.md §9) regresses over ALL records, so a handful
+  of measurements improves the ranking of every un-measured shape.
+
+Both maps merge the on-disk state before every flush (two writers never
+lose each other's entries — last-writer-wins per key, not per file).
+
+Module-level ``get/put/flush/stats/...`` delegate to a default Registry
+instance, preserving the original functional API; hit/miss counters live
+ON the instance and are guarded by its write lock (they used to be a
+shared module global, which double-counted across instances/threads).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
+import logging
 import os
 import tempfile
 import threading
@@ -20,13 +41,7 @@ import jax
 
 from repro.core.plan import Plan
 
-_LOCK = threading.Lock()
-_MEM: dict[str, Plan] = {}
-_LOADED_FROM: Optional[Path] = None
-# lookup telemetry: a miss means the caller had to tune fresh.  After the
-# install stage has swept the serving buckets, an Engine start must be
-# all hits (asserted in tests/test_bucketed_serving.py).
-_STATS = {"hits": 0, "misses": 0}
+log = logging.getLogger(__name__)
 
 
 def cache_path() -> Path:
@@ -34,6 +49,13 @@ def cache_path() -> Path:
     if p:
         return Path(p)
     return Path(os.environ.get("HOME", "/tmp")) / ".cache" / "repro" / "plans.json"
+
+
+def measure_cache_path() -> Path:
+    p = os.environ.get("REPRO_MEASURE_CACHE")
+    if p:
+        return Path(p)
+    return cache_path().with_name("measurements.json")
 
 
 def _platform() -> str:
@@ -44,63 +66,41 @@ def _key(problem_key: str) -> str:
     return f"{_platform()}/{problem_key}"
 
 
-def _load_file() -> dict:
-    global _LOADED_FROM
-    path = cache_path()
-    if path.exists():
-        try:
-            with open(path) as f:
-                raw = json.load(f)
-            for k, v in raw.items():
-                if k not in _MEM:
-                    _MEM[k] = Plan.from_json(v)
-        except (json.JSONDecodeError, TypeError, KeyError):
-            pass  # corrupt cache: treat as empty, will be overwritten
-    _LOADED_FROM = path
-    return _MEM
+@dataclasses.dataclass(frozen=True)
+class MeasureRecord:
+    """One wall-clock measurement of one candidate plan.
+
+    ``seconds`` is the fastest of ``iters`` timed calls (scheduling noise
+    is strictly additive, so the min estimates the kernel's own cost);
+    ``dispersion`` is the interquartile range over that minimum (a
+    unit-free stability signal — re-measure when it is large).
+    ``source`` records provenance (install sweep, background tuner,
+    benchmark, ...)."""
+
+    plan: Plan
+    seconds: float
+    iters: int
+    dispersion: float
+    impl: str = "xla"
+    source: str = "evaluator"
+
+    def key(self) -> str:
+        return f"{self.plan.problem.key()}/{self.plan.tuning_key()}"
+
+    def to_json(self) -> dict:
+        return {"plan": self.plan.to_json(), "seconds": self.seconds,
+                "iters": self.iters, "dispersion": self.dispersion,
+                "impl": self.impl, "source": self.source}
+
+    @staticmethod
+    def from_json(d: dict) -> "MeasureRecord":
+        d = dict(d)
+        d["plan"] = Plan.from_json(d["plan"])
+        return MeasureRecord(**d)
 
 
-def get(problem_key: str) -> Optional[Plan]:
-    with _LOCK:
-        if _LOADED_FROM is None:
-            _load_file()
-        plan = _MEM.get(_key(problem_key))
-        _STATS["hits" if plan is not None else "misses"] += 1
-        return plan
-
-
-def _merge_disk() -> None:
-    """Fold plans persisted by OTHER processes into ``_MEM`` (lock held).
-
-    Concurrent launchers on a pod slice share one cache file over NFS:
-    anything they flushed after our initial ``_load_file`` is on disk but
-    not in our memory, and a plain dump of ``_MEM`` would clobber it.
-    Our own in-memory plans win key conflicts (freshest tuning)."""
-    path = cache_path()
-    if not path.exists():
-        return
-    try:
-        with open(path) as f:
-            raw = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        return  # mid-replace or corrupt: nothing mergeable
-    for k, v in raw.items():
-        if k not in _MEM:
-            try:
-                _MEM[k] = Plan.from_json(v)
-            except (TypeError, KeyError):
-                continue
-
-
-def _write_file() -> None:
-    """Single atomic write of the whole in-memory map (lock held).
-
-    Re-reads and merges the on-disk map first so two writers never lose
-    each other's plans: last-writer-wins only per key, not per file."""
-    path = cache_path()
+def _atomic_write_json(path: Path, blob: dict) -> None:
     path.parent.mkdir(parents=True, exist_ok=True)
-    _merge_disk()
-    blob = {k: p.to_json() for k, p in _MEM.items()}
     fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
     try:
         with os.fdopen(fd, "w") as f:
@@ -112,40 +112,289 @@ def _write_file() -> None:
         raise
 
 
-def put(plan: Plan, persist: bool = True) -> None:
-    with _LOCK:
-        if _LOADED_FROM is None:
-            _load_file()
-        _MEM[_key(plan.problem.key())] = plan
-        if persist:
-            _write_file()
+def _read_json(path: Path) -> Optional[dict]:
+    if not path.exists():
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError, TypeError):
+        return None  # mid-replace or corrupt: nothing mergeable
+
+
+def _fold_missing(path: Path, dest: dict, from_json) -> None:
+    """Fold the on-disk map into ``dest`` for keys we do not hold —
+    the shared NFS load/merge primitive for both caches; per-entry
+    decode errors are skipped (corrupt entries never poison a merge)."""
+    raw = _read_json(path)
+    if not raw:
+        return
+    for k, v in raw.items():
+        if k not in dest:
+            try:
+                dest[k] = from_json(v)
+            except (TypeError, KeyError):
+                continue
+
+
+class Registry:
+    """One plan + measurement cache with instance-local state.
+
+    All mutable state (maps, hit/miss stats, the miss log) is owned by
+    the instance and guarded by ``self._lock`` — two Registry instances
+    (or two threads on one instance) never bleed counters into each
+    other.  Paths default to the ``REPRO_PLAN_CACHE`` /
+    ``REPRO_MEASURE_CACHE`` environment (re-read per access, so tests
+    can monkeypatch then ``clear_memory()``)."""
+
+    def __init__(self, plan_path: Optional[Path] = None,
+                 measure_path: Optional[Path] = None):
+        self._lock = threading.Lock()
+        self._plan_path = Path(plan_path) if plan_path else None
+        self._measure_path = Path(measure_path) if measure_path else None
+        self._mem: dict[str, Plan] = {}
+        self._meas: dict[str, MeasureRecord] = {}
+        self._loaded_from: Optional[Path] = None
+        self._meas_loaded_from: Optional[Path] = None
+        # lookup telemetry: a miss means the caller had to tune fresh.
+        # After the install stage has swept the serving buckets, an Engine
+        # start must be all hits (asserted in tests/test_bucketed_serving.py).
+        self._stats = {"hits": 0, "misses": 0}
+        # ordered de-duplicated problem keys that missed — drained by the
+        # serving engine's background tuner (DESIGN.md §9)
+        self._missed: list[str] = []
+        self._missed_set: set = set()
+
+    # -- paths ----------------------------------------------------------
+
+    def plan_path(self) -> Path:
+        return self._plan_path if self._plan_path is not None else cache_path()
+
+    def measure_path(self) -> Path:
+        return (self._measure_path if self._measure_path is not None
+                else measure_cache_path())
+
+    # -- plans ----------------------------------------------------------
+
+    def _load_file(self) -> None:
+        """(lock held) fold the on-disk plan map into memory."""
+        _fold_missing(self.plan_path(), self._mem, Plan.from_json)
+        self._loaded_from = self.plan_path()
+
+    def _merge_disk(self, protect: frozenset = frozenset()) -> None:
+        """Fold plans persisted by OTHER processes into memory (lock held).
+
+        Concurrent launchers on a pod slice share one cache file over NFS:
+        anything they flushed after our initial load is on disk but not in
+        our memory, and a plain dump would clobber it.  Per key, our own
+        in-memory plan wins (freshest tuning) — EXCEPT when the disk plan
+        is measured and ours is only model-ranked: wall-clock provenance
+        outranks a model re-rank, whoever wrote it.  ``protect`` keys are
+        exempt from that exception (a force-put must stand)."""
+        raw = _read_json(self.plan_path())
+        if not raw:
+            return
+        for k, v in raw.items():
+            try:
+                theirs = Plan.from_json(v)
+            except (TypeError, KeyError):
+                continue
+            ours = self._mem.get(k)
+            if ours is None or (k not in protect
+                                and theirs.chosen_by == "measured"
+                                and ours.chosen_by != "measured"):
+                self._mem[k] = theirs
+
+    def _write_file(self, protect: frozenset = frozenset()) -> None:
+        """Single atomic merge-then-write of the whole plan map (lock held)."""
+        self._merge_disk(protect)
+        _atomic_write_json(self.plan_path(),
+                           {k: p.to_json() for k, p in self._mem.items()})
+
+    def get(self, problem_key: str) -> Optional[Plan]:
+        with self._lock:
+            if self._loaded_from is None:
+                self._load_file()
+            plan = self._mem.get(_key(problem_key))
+            if plan is not None:
+                self._stats["hits"] += 1
+            else:
+                self._stats["misses"] += 1
+                if problem_key not in self._missed_set:
+                    self._missed_set.add(problem_key)
+                    self._missed.append(problem_key)
+            return plan
+
+    def peek(self, problem_key: str) -> Optional[Plan]:
+        """Lookup without touching the hit/miss telemetry or the miss
+        log — for the background tuner's "already measured?" check."""
+        with self._lock:
+            if self._loaded_from is None:
+                self._load_file()
+            return self._mem.get(_key(problem_key))
+
+    def put(self, plan: Plan, persist: bool = True, force: bool = False) -> Plan:
+        """Insert ``plan``; returns the plan actually stored.
+
+        Provenance guard: an existing *measured* winner is never replaced
+        by a model-ranked plan (``chosen_by == "model"``) unless
+        ``force=True`` — the calibrated re-rank pass and trace-time
+        planning both route through here, so a wall-clocked choice
+        survives them by construction."""
+        with self._lock:
+            if self._loaded_from is None:
+                self._load_file()
+            key = _key(plan.problem.key())
+            cur = self._mem.get(key)
+            if (not force and cur is not None
+                    and cur.chosen_by == "measured"
+                    and plan.chosen_by != "measured"):
+                log.debug("registry: keeping measured winner for %s "
+                          "(model-ranked challenger dropped)", key)
+            else:
+                self._mem[key] = plan
+            if persist:
+                self._write_file(frozenset((key,)) if force else frozenset())
+            # the flush may itself have merged a measured winner from a
+            # concurrent writer over our entry: report what stands NOW
+            return self._mem.get(key, plan)
+
+    def flush(self) -> None:
+        """Persist plans AND measurements (one atomic write each) — the
+        bulk path for the install sweep and engine pre-pack, which insert
+        buckets x shapes x archs entries via put(persist=False) first;
+        per-entry writes would be O(n) rewrites of the whole cache."""
+        with self._lock:
+            if self._loaded_from is None:
+                self._load_file()
+            self._write_file()
+            if self._meas:
+                self._write_measure_file()
+
+    # -- measurements ---------------------------------------------------
+
+    def _load_measure_file(self) -> None:
+        _fold_missing(self.measure_path(), self._meas,
+                      MeasureRecord.from_json)
+        self._meas_loaded_from = self.measure_path()
+
+    def _write_measure_file(self) -> None:
+        """(lock held) merge-then-write, mirroring the plan map: records
+        flushed by other processes survive; per key ours wins."""
+        _fold_missing(self.measure_path(), self._meas,
+                      MeasureRecord.from_json)
+        _atomic_write_json(self.measure_path(),
+                           {k: r.to_json() for k, r in self._meas.items()})
+
+    def record_measurement(self, rec: MeasureRecord,
+                           persist: bool = False) -> None:
+        with self._lock:
+            if self._meas_loaded_from is None:
+                self._load_measure_file()
+            self._meas[f"{_platform()}/{rec.key()}"] = rec
+            if persist:
+                self._write_measure_file()
+
+    def lookup_measurement(self, plan: Plan) -> Optional[MeasureRecord]:
+        with self._lock:
+            if self._meas_loaded_from is None:
+                self._load_measure_file()
+            return self._meas.get(
+                f"{_platform()}/{plan.problem.key()}/{plan.tuning_key()}")
+
+    def measurements(self, problem_key: Optional[str] = None) -> list:
+        """All cached records for this platform (optionally one problem)."""
+        with self._lock:
+            if self._meas_loaded_from is None:
+                self._load_measure_file()
+            pre = f"{_platform()}/"
+            out = [r for k, r in self._meas.items() if k.startswith(pre)]
+        if problem_key is not None:
+            out = [r for r in out if r.plan.problem.key() == problem_key]
+        return out
+
+    # -- telemetry ------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self._stats)
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self._stats["hits"] = self._stats["misses"] = 0
+
+    def drain_misses(self) -> list:
+        """Return-and-clear the ordered list of problem keys that missed
+        since the last drain — the background tuner's work queue."""
+        with self._lock:
+            out = self._missed
+            self._missed = []
+            self._missed_set = set()
+            return out
+
+    def clear_memory(self) -> None:
+        """Testing hook: drop the in-memory caches (files untouched)."""
+        with self._lock:
+            self._mem.clear()
+            self._meas.clear()
+            self._loaded_from = None
+            self._meas_loaded_from = None
+            self._stats["hits"] = self._stats["misses"] = 0
+            self._missed = []
+            self._missed_set = set()
+
+
+# ---------------------------------------------------------------------------
+# Module-level API: delegates to one default Registry (the original
+# functional interface — every existing caller keeps working).
+# ---------------------------------------------------------------------------
+
+_DEFAULT = Registry()
+
+
+def default() -> Registry:
+    return _DEFAULT
+
+
+def get(problem_key: str) -> Optional[Plan]:
+    return _DEFAULT.get(problem_key)
+
+
+def peek(problem_key: str) -> Optional[Plan]:
+    return _DEFAULT.peek(problem_key)
+
+
+def put(plan: Plan, persist: bool = True, force: bool = False) -> Plan:
+    return _DEFAULT.put(plan, persist=persist, force=force)
 
 
 def flush() -> None:
-    """Persist everything currently in memory (one atomic write) — the
-    bulk path for the install sweep and engine pre-pack, which insert
-    buckets x shapes x archs plans via put(persist=False) first; per-plan
-    writes would be O(n) rewrites of the whole cache."""
-    with _LOCK:
-        if _LOADED_FROM is None:
-            _load_file()
-        _write_file()
+    _DEFAULT.flush()
+
+
+def record_measurement(rec: MeasureRecord, persist: bool = False) -> None:
+    _DEFAULT.record_measurement(rec, persist=persist)
+
+
+def lookup_measurement(plan: Plan) -> Optional[MeasureRecord]:
+    return _DEFAULT.lookup_measurement(plan)
+
+
+def measurements(problem_key: Optional[str] = None) -> list:
+    return _DEFAULT.measurements(problem_key)
 
 
 def stats() -> dict:
-    with _LOCK:
-        return dict(_STATS)
+    return _DEFAULT.stats()
 
 
 def reset_stats() -> None:
-    with _LOCK:
-        _STATS["hits"] = _STATS["misses"] = 0
+    _DEFAULT.reset_stats()
+
+
+def drain_misses() -> list:
+    return _DEFAULT.drain_misses()
 
 
 def clear_memory() -> None:
-    """Testing hook: drop the in-memory cache (file untouched)."""
-    global _LOADED_FROM
-    with _LOCK:
-        _MEM.clear()
-        _LOADED_FROM = None
-        _STATS["hits"] = _STATS["misses"] = 0
+    _DEFAULT.clear_memory()

@@ -28,7 +28,8 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core import registry
-from repro.core.autotuner import make_plan, make_plan_set, plan_for_matmul
+from repro.core.autotuner import (default_hw, make_plan, make_plan_set,
+                                  plan_for_matmul)
 from repro.core.hw import TPU_V5E, HwSpec
 from repro.core.packing import PackedTensor, is_packed, pack
 from repro.core.plan import Plan, Problem, is_tsmm
@@ -96,7 +97,7 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
 
 def prepack_for(m_skinny, w, *, num_shards: int = 1,
                 shard_divisors: tuple = (1, 1),
-                hw: HwSpec = TPU_V5E) -> Optional[PackedTensor]:
+                hw: Optional[HwSpec] = None) -> Optional[PackedTensor]:
     """Plan + pack a weight for decode-time reuse.
 
     ``m_skinny`` is one serving batch size or a tuple of batch buckets
@@ -112,6 +113,7 @@ def prepack_for(m_skinny, w, *, num_shards: int = 1,
     Returns None when no conforming block exists (caller keeps the plain
     weight; honest fallback, recorded by the caller).
     """
+    hw = hw or default_hw()
     buckets = (m_skinny,) if isinstance(m_skinny, int) else tuple(m_skinny)
     k, n = int(w.shape[-2]), int(w.shape[-1])
     rs, cs = shard_divisors

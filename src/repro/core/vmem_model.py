@@ -23,9 +23,17 @@ import dataclasses
 from repro.core.hw import TPU_V5E, VMEM_USABLE_FRACTION, HwSpec, dtype_bytes
 from repro.core.plan import Plan, Problem
 
-# Fixed per-grid-step overhead (DMA issue + semaphores), calibrated order of
-# magnitude for v5e-class chips.
-GRID_STEP_OVERHEAD_S = 1.5e-7
+# The per-contraction-step overhead (DMA issue + semaphores) lives on
+# ``HwSpec.grid_overhead_s`` so the calibration pass (DESIGN.md §9) can
+# fit it from measurements; the 1.5e-7s default there is the v5e-class
+# order of magnitude.
+
+
+def nominal(hw: HwSpec) -> HwSpec:
+    """``hw`` with the calibration coefficients reset — the datasheet
+    roofline the fit regresses against (see :func:`features`)."""
+    return dataclasses.replace(hw, mxu_efficiency=1.0, hbm_efficiency=1.0,
+                               calibrated=False)
 
 
 def _ceil(a, b):
@@ -96,19 +104,42 @@ def compute_time_s(plan: Plan, hw: HwSpec = TPU_V5E) -> float:
     else:
         eff_m = _ceil(max(p.m, 1), 8) * 8  # sublane padding
         flops = 2.0 * eff_m * p.k * p.n
-    return flops / hw.peak_flops(p.dtype)
+    return flops / (hw.peak_flops(p.dtype) * hw.mxu_efficiency)
 
 
 def memory_time_s(plan: Plan, hw: HwSpec = TPU_V5E) -> float:
-    return hbm_traffic_bytes(plan) / hw.hbm_bw
+    return hbm_traffic_bytes(plan) / (hw.hbm_bw * hw.hbm_efficiency)
+
+
+def features(plan: Plan, hw: HwSpec = TPU_V5E) -> tuple:
+    """Nominal-roofline regressors for the calibration fit (DESIGN.md §9):
+    (memory seconds at datasheet bandwidth, compute seconds at datasheet
+    FLOPs, contraction-step count).  A measured time t then fits
+    ``t ~= t_mem / hbm_efficiency + t_cmp / mxu_efficiency
+    + k_steps * grid_overhead_s`` — linear in the three coefficients."""
+    base = nominal(hw)
+    return (memory_time_s(plan, base), compute_time_s(plan, base),
+            float(plan.grid[1]))
 
 
 def predict(plan: Plan, hw: HwSpec = TPU_V5E) -> Plan:
-    """Attach predicted times + a scalar score (lower = better)."""
+    """Attach predicted times + a scalar score (lower = better).
+
+    The overhead term counts CONTRACTION steps (``grid[1]``, the k-axis):
+    output-tile steps pipeline against the operand DMAs, but every extra
+    k-block serializes another partial-sum accumulation (on the XLA
+    fallback, another pass over the fp32 accumulator) — measurements
+    show the k-split, not the output split, is what costs.
+
+    Uncalibrated: the classic ``max(compute, memory)`` roofline.  A
+    calibrated ``hw`` uses the additive form the least-squares fit solved
+    (overlap is absorbed into the fitted efficiencies; the max() roofline
+    is not linear in its coefficients, so it cannot be fitted directly)."""
     t_c = compute_time_s(plan, hw)
     t_m = memory_time_s(plan, hw)
-    ng = plan.grid[0] * plan.grid[1]
-    score = max(t_c, t_m) + ng * GRID_STEP_OVERHEAD_S
+    nk = plan.grid[1]
+    base = (t_c + t_m) if hw.calibrated else max(t_c, t_m)
+    score = base + nk * hw.grid_overhead_s
     return dataclasses.replace(plan, t_compute=t_c, t_memory=t_m, score=score)
 
 

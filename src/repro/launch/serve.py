@@ -82,6 +82,10 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=0)
     ap.add_argument("--no-prepack", action="store_true")
+    ap.add_argument("--background-tune", action="store_true",
+                    help="on registry miss, serve off the calibrated-model "
+                         "plan and wall-clock + commit the measured winner "
+                         "on a background thread (DESIGN.md §9)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -103,9 +107,20 @@ def main():
         max_len = args.max_len or (max_prompt + args.steps + 8)
 
     eng = Engine(model, params, axes, max_len=max_len, max_batch=max_batch,
-                 max_prompt=max_prompt, prepack=not args.no_prepack)
+                 max_prompt=max_prompt, prepack=not args.no_prepack,
+                 background_tune=args.background_tune)
     print(f"buckets={eng.buckets} length_buckets={eng.grid.length} "
           f"packed_leaves={len(eng.pack_report)}")
+
+    def epilogue():
+        from repro.core import registry
+        s = registry.stats()
+        print(f"plan registry: {s['hits']} hits / {s['misses']} misses")
+        if eng.tuner is not None:
+            eng.tuner.join(timeout=300)
+            print(f"background tuner committed {len(eng.tuner.committed)} "
+                  f"measured plans "
+                  f"({len(registry.measurements())} cached measurements)")
 
     if ragged:
         rng = np.random.default_rng(0)
@@ -122,6 +137,7 @@ def main():
         print("-- scheduler telemetry --")
         for k, v in stats.rows():
             print(f"  {k:20s} {v}")
+        epilogue()
         return
 
     for b, p in trace:
@@ -130,6 +146,7 @@ def main():
               f"prefill={res.prefill_s:.3f}s "
               f"per_token={res.per_token_s*1e3:.2f}ms")
         print("  tokens[0]:", list(map(int, res.tokens[0])))
+    epilogue()
 
 
 if __name__ == "__main__":

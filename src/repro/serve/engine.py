@@ -17,12 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import threading
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import BucketGrid, bucket_for, buckets_for, \
+from repro.core.plan import BucketGrid, Problem, bucket_for, buckets_for, \
     length_buckets_for
 from repro.core.tsmm import prepack_for
 from repro.models.param import is_axes_leaf
@@ -115,6 +116,70 @@ def pack_tree_for_serving(params, axes, batch_m, mesh=None,
     return packed, report
 
 
+class _BackgroundTuner:
+    """Measures registry-missed problems off-thread and commits winners
+    (DESIGN.md §9 runtime miss path).
+
+    On a registry miss the engine serves IMMEDIATELY off the
+    calibrated-model plan the autotuner produced at trace time; the
+    missed problem keys are drained here, wall-clocked on a daemon
+    thread with the adaptive short-list search, and the measured winner
+    is committed back to the registry — admission never blocks on a
+    stopwatch.  The registry's provenance guard makes the commit safe
+    against concurrent model-ranked puts from the serving thread."""
+
+    def __init__(self, hw=None, *, top_k: int = 4, stable: int = 2,
+                 iters: int = 3, warmup: int = 1):
+        self.hw = hw
+        self.top_k, self.stable = top_k, stable
+        self.iters, self.warmup = iters, warmup
+        self.committed: list = []
+        self._seen: set = set()
+        self._threads: list = []
+        self._lock = threading.Lock()
+
+    def submit(self, problem_keys: list) -> None:
+        with self._lock:
+            fresh = [k for k in problem_keys if k not in self._seen]
+            self._seen.update(fresh)
+        if not fresh:
+            return
+        t = threading.Thread(target=self._work, args=(fresh,), daemon=True,
+                             name="repro-bg-tuner")
+        with self._lock:
+            self._threads.append(t)
+        t.start()
+
+    def busy(self) -> bool:
+        with self._lock:
+            return any(t.is_alive() for t in self._threads)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(timeout)
+
+    def _work(self, keys: list) -> None:
+        from repro.core import registry
+        from repro.core.autotuner import make_plan
+        for key in keys:
+            try:
+                cur = registry.peek(key)
+                if cur is not None and cur.chosen_by == "measured":
+                    continue             # a previous run already timed it
+                plan = make_plan(Problem.from_key(key), self.hw,
+                                 measure="wallclock", force=True,
+                                 persist=False, top_k=self.top_k,
+                                 stable=self.stable, iters=self.iters,
+                                 warmup=self.warmup)
+                self.committed.append(plan)
+                log.info("background tuner committed %s", plan)
+            except Exception:
+                log.exception("background tune failed for %s", key)
+        registry.flush()                 # plans + measurement records
+
+
 @dataclasses.dataclass
 class GenerateResult:
     tokens: jnp.ndarray          # (B, steps)
@@ -122,6 +187,10 @@ class GenerateResult:
     prefill_s: float = 0.0
     per_token_s: float = 0.0
     buckets: tuple = ()          # bucket(s) the group was served from
+    # first-invocation (trace + jit compile + first run) time of this
+    # group's prefill/decode programs — included in prefill_s/per_token_s
+    # but reported separately so throughput comparisons can use warm time
+    compile_s: float = 0.0
 
 
 class Engine:
@@ -145,12 +214,26 @@ class Engine:
                  buckets: Optional[tuple] = None,
                  max_prompt: Optional[int] = None, min_prompt: int = 8,
                  mesh=None, opts: Optional[ShardingOptions] = None,
-                 prepack: bool = True):
+                 prepack: bool = True, background_tune: bool = False,
+                 tuner_opts: Optional[dict] = None):
         if max_batch is None:
             max_batch = batch_size
         self.model = model
         self.mesh = mesh
         self.opts = opts or ShardingOptions()
+        # programs (keyed by kind + shape) this engine has already run
+        # once — the scheduler uses it to split first-invocation jit time
+        # out of its throughput telemetry (SchedulerStats.compile_s)
+        self._warm_programs: set = set()
+        self.tuner: Optional[_BackgroundTuner] = None
+        if background_tune:
+            # close the measure -> model -> plan loop: trace-time misses
+            # rank against the measurement-calibrated model, and missed
+            # problems get wall-clocked + committed off-thread below
+            from repro.core import autotuner, evaluator
+            hw = evaluator.calibrated_hw()
+            autotuner.set_default_hw(hw)
+            self.tuner = _BackgroundTuner(hw, **(tuner_opts or {}))
         if buckets:
             self.buckets = tuple(sorted(buckets))
             # the largest admissible chunk is the largest bucket: bigger
@@ -191,6 +274,21 @@ class Engine:
         # attention cache): one program per length bucket, any slot/clock
         self._prefill_row = (jax.jit(model.prefill_row, donate_argnums=(2,))
                              if model.prefill_row is not None else None)
+        self._drain_misses()
+
+    # -- background tuning (runtime miss path, DESIGN.md §9) ------------
+
+    def _drain_misses(self) -> None:
+        """Hand any registry misses since the last drain to the
+        background tuner — serving already ran off the model-ranked
+        plans; measurement must never block the serving thread."""
+        if self.tuner is None:
+            return
+        from repro.core import registry
+        keys = registry.drain_misses()
+        if keys:
+            log.info("background-tuning %d registry misses", len(keys))
+            self.tuner.submit(keys)
 
     # -- bucket dispatch ------------------------------------------------
 
@@ -229,6 +327,7 @@ class Engine:
             prefill_s=sum(r.prefill_s for r in parts),
             per_token_s=sum(r.per_token_s for r in parts),
             buckets=tuple(bk for r in parts for bk in r.buckets),
+            compile_s=sum(r.compile_s for r in parts),
         )
 
     def _generate_bucket(self, batch: dict, steps: int) -> GenerateResult:
@@ -236,26 +335,46 @@ class Engine:
         b = batch["tokens"].shape[0]
         bucket = self.bucket_of(b)
         batch = self._pad_group(batch, b, bucket)
+        # first invocation of a (bucket, prompt-shape) program is trace +
+        # compile + run: attribute it to compile_s (same split the
+        # continuous scheduler reports) so throughput stays warm-honest
+        pkey = ("prefill", bucket, batch["tokens"].shape[-1])
+        dkey = ("decode", bucket, 1)
+        cold_p = pkey not in self._warm_programs
+        cold_d = dkey not in self._warm_programs
+        compile_s = 0.0
         with sharding_ctx(self.mesh, self.opts):
             cache = self.model.init_cache(bucket, self.max_len)
             t0 = time.perf_counter()
             logits, cache = jax.block_until_ready(
                 self._prefill(self.params, batch, cache))
             t1 = time.perf_counter()
+            if cold_p:
+                compile_s += t1 - t0
+                self._warm_programs.add(pkey)
             toks = []
             tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            for _ in range(steps):
+            for i in range(steps):
                 toks.append(tok)
-                logits, cache = self._decode(self.params, cache, tok)
+                if i == 0 and cold_d:
+                    td = time.perf_counter()
+                    logits, cache = self._decode(self.params, cache, tok)
+                    jax.block_until_ready(logits)
+                    compile_s += time.perf_counter() - td
+                    self._warm_programs.add(dkey)
+                else:
+                    logits, cache = self._decode(self.params, cache, tok)
                 tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
             jax.block_until_ready(tok)
             t2 = time.perf_counter()
+        self._drain_misses()
         return GenerateResult(
             tokens=jnp.concatenate(toks, axis=1)[:b],
             logits_last=logits[:b],
             prefill_s=t1 - t0,
             per_token_s=(t2 - t1) / max(steps, 1),
             buckets=(bucket,),
+            compile_s=compile_s,
         )
 
     def ragged_supported(self) -> bool:
@@ -312,7 +431,8 @@ class Engine:
                                logits_last=res.logits_last[i:i + 1],
                                prefill_s=res.prefill_s,
                                per_token_s=res.per_token_s,
-                               buckets=res.buckets)
+                               buckets=res.buckets,
+                               compile_s=res.compile_s)
                 for i in range(len(requests))]
 
     def serve_queue(self, requests: list, *, slots: Optional[int] = None):
@@ -322,4 +442,6 @@ class Engine:
         finished streams free their slot mid-flight and queued requests
         join the running decode batch.  Returns (results, stats)."""
         from repro.serve.scheduler import ContinuousScheduler
-        return ContinuousScheduler(self, slots=slots).run(requests)
+        out = ContinuousScheduler(self, slots=slots).run(requests)
+        self._drain_misses()
+        return out

@@ -1,0 +1,355 @@
+"""Evaluator + calibration subsystem (DESIGN.md §9): measurement-path
+fidelity, the persistent measurement cache, the least-squares calibration
+round-trip, the adaptive short-list search, and the engine's background
+miss path."""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import evaluator, registry
+from repro.core.hw import TPU_V5E
+from repro.core.plan import Plan, Problem
+from repro.core.vmem_model import features, predict
+
+
+@pytest.fixture
+def cache_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans.json"))
+    monkeypatch.setenv("REPRO_MEASURE_CACHE",
+                       str(tmp_path / "measurements.json"))
+    registry.clear_memory()
+    yield tmp_path
+    registry.clear_memory()
+
+
+def _skinny(prepack=True, m=4, k=512, n=256, bk=128, bn=128, dtype="float32"):
+    return predict(Plan(Problem(m, k, n, dtype), "skinny_a", bm=m, bk=bk,
+                        bn=bn, impl="xla", prepack=prepack))
+
+
+def _tall(prepack=True, m=1024, k=512, n=16, bm=256, bk=128, dtype="float32"):
+    return predict(Plan(Problem(m, k, n, dtype), "tall_a", bm=bm, bk=bk,
+                        bn=128, impl="xla", prepack=prepack))
+
+
+# -- measurement-path fidelity (the build_callable prepack bug) ----------
+
+
+def test_skinny_prepack_false_packs_inside_timed_region(monkeypatch):
+    """A prepack=False skinny plan makes tsmm_dot re-pack the weight on
+    every call — the timed callable must pay that too (it used to pack
+    outside the region, timing prepack=False plans as pre-packed)."""
+    from repro.core import packing
+    calls = []
+    orig = packing.pack
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(packing, "pack", spy)
+    fn = evaluator.build_callable(_skinny(prepack=False))
+    n0 = len(calls)
+    fn()
+    fn()
+    assert len(calls) == n0 + 2, "per-call pack must be inside the region"
+
+    fn = evaluator.build_callable(_skinny(prepack=True))
+    n0 = len(calls)
+    fn()
+    assert len(calls) == n0, "pre-packed plan must not pack per call"
+
+
+@pytest.mark.parametrize("plan", [
+    _skinny(prepack=True), _skinny(prepack=False),
+    _tall(prepack=True), _tall(prepack=False),
+    _skinny(dtype="bfloat16"),
+], ids=lambda p: f"{p.orientation}_pp{int(p.prepack)}_{p.problem.dtype}")
+def test_timed_callable_matches_serving_path(plan):
+    """The parity assertion: build_callable's output == tsmm_dot replay."""
+    evaluator.parity_check(plan)
+
+
+def test_parity_check_catches_divergence(monkeypatch):
+    plan = _skinny(prepack=True)
+    monkeypatch.setattr(evaluator, "build_callable",
+                        lambda p, impl=None: (lambda: np.zeros(
+                            (p.problem.m, p.problem.n), np.float32)))
+    with pytest.raises(AssertionError, match="parity"):
+        evaluator.parity_check(plan)
+
+
+# -- measurement cache ---------------------------------------------------
+
+
+def test_measure_record_roundtrip_and_reuse(cache_env):
+    plan = _skinny()
+    rec = evaluator.measure_plan(plan, iters=2, warmup=1)
+    assert rec.seconds > 0 and rec.iters == 2 and rec.dispersion >= 0
+    assert rec.impl == "xla"
+    registry.flush()
+    registry.clear_memory()          # fresh process: file must carry it
+    got = registry.lookup_measurement(plan)
+    assert got is not None and got.seconds == rec.seconds
+    assert got.source == "evaluator"
+    assert registry.measurements(plan.problem.key()) == [got]
+
+
+def test_measure_plans_reuses_cached_records(cache_env, monkeypatch):
+    plans = [_skinny(bk=128), _skinny(bk=256)]
+    timed = []
+    orig = evaluator._time_samples
+
+    def spy(fn, **kw):
+        timed.append(1)
+        return orig(fn, **kw)
+
+    monkeypatch.setattr(evaluator, "_time_samples", spy)
+    best = evaluator.measure_plans(plans, iters=2, warmup=0)
+    assert best.chosen_by == "measured" and best.score > 0
+    n_first = len(timed)
+    assert n_first == 2
+    best2 = evaluator.measure_plans(plans, iters=2, warmup=0)
+    assert len(timed) == n_first, "cached records must be reused"
+    assert best2.score == best.score
+
+
+def test_measure_plans_empty_raises(cache_env):
+    with pytest.raises(ValueError):
+        evaluator.measure_plans([])
+
+
+def test_interleaved_measurement_records_every_plan(cache_env):
+    plans = [_skinny(bk=128), _skinny(bk=256), _skinny(bn=256)]
+    recs = evaluator.measure_plans_interleaved(plans, rounds=2, warmup=1)
+    assert len(recs) == 3
+    assert all(r.seconds > 0 and r.iters == 2 for r in recs)
+    assert len(registry.measurements()) == 3
+
+
+# -- measured-winner provenance ------------------------------------------
+
+
+def test_model_put_never_overwrites_measured_winner(cache_env):
+    plan = _skinny()
+    measured = dataclasses.replace(plan, chosen_by="measured", score=1e-3)
+    registry.put(measured)
+    challenger = dataclasses.replace(plan, bk=256, chosen_by="model")
+    stored = registry.put(challenger)
+    assert stored == measured, "model-ranked plan displaced a measured one"
+    assert registry.get(plan.problem.key()) == measured
+    # a fresh measurement MAY replace it; force overrides explicitly
+    remeasured = dataclasses.replace(challenger, chosen_by="measured",
+                                     score=5e-4)
+    assert registry.put(remeasured) == remeasured
+    forced = registry.put(challenger, force=True)
+    assert forced == challenger
+
+
+def test_measured_provenance_survives_disk_roundtrip(cache_env):
+    plan = dataclasses.replace(_skinny(), chosen_by="measured", score=2.5e-3)
+    registry.put(plan)
+    registry.clear_memory()
+    got = registry.get(plan.problem.key())
+    assert got.chosen_by == "measured"
+    assert got.score == pytest.approx(2.5e-3)
+
+
+def test_calibrated_rerank_keeps_measured_winner(cache_env):
+    """The install --calibrate pass re-tunes with force-less puts: an
+    existing measured winner must survive the model-ranked re-rank."""
+    from repro.core.autotuner import make_plan
+    problem = Problem(8192, 4096, 16, "float32")
+    first = make_plan(problem, persist=False)
+    measured = dataclasses.replace(first, chosen_by="measured", score=3e-3)
+    registry.put(measured, persist=False)
+    hw_cal = dataclasses.replace(TPU_V5E, hbm_efficiency=0.01,
+                                 grid_overhead_s=1e-3, calibrated=True)
+    reranked = make_plan(problem, hw_cal, force=True, persist=False)
+    assert reranked == measured
+    assert registry.get(problem.key()) == measured
+
+
+# -- calibration fit -----------------------------------------------------
+
+
+def _synthetic_records(hw_true):
+    """Records whose times follow hw_true's additive model exactly.
+
+    The last pair trades streamed-B traffic (small bm -> more reloads)
+    against contraction steps (small bk -> more k-blocks): under a large
+    true per-step overhead the datasheet model misranks it, so a fit
+    that recovers the overhead measurably improves the ranking."""
+    recs = []
+    for plan in [_skinny(bk=128), _skinny(bk=256), _skinny(bn=256, bk=128),
+                 _skinny(m=8, k=1024, bk=512), _tall(bm=256, bk=128),
+                 _tall(bm=512, bk=256), _tall(m=2048, bm=256, bk=512),
+                 _tall(m=4096, bm=1024, bk=128),
+                 _tall(m=4096, bm=512, bk=512),
+                 _tall(m=4096, bm=4096, bk=128)]:
+        t = predict(plan, hw_true).score
+        recs.append(registry.MeasureRecord(plan=plan, seconds=t, iters=3,
+                                           dispersion=0.0))
+    return recs
+
+
+def test_fit_hw_recovers_ground_truth():
+    hw_true = dataclasses.replace(TPU_V5E, hbm_efficiency=0.05,
+                                  mxu_efficiency=0.5,
+                                  grid_overhead_s=2e-6, calibrated=True)
+    fitted = evaluator.fit_hw(_synthetic_records(hw_true), TPU_V5E)
+    assert fitted.calibrated
+    assert fitted.hbm_efficiency == pytest.approx(0.05, rel=0.05)
+    assert fitted.mxu_efficiency == pytest.approx(0.5, rel=0.05)
+    assert fitted.grid_overhead_s == pytest.approx(2e-6, rel=0.05)
+
+
+def test_fit_improves_ranking_on_synthetic_times():
+    hw_true = dataclasses.replace(TPU_V5E, hbm_efficiency=0.05,
+                                  mxu_efficiency=0.5,
+                                  grid_overhead_s=2e-5, calibrated=True)
+    recs = _synthetic_records(hw_true)
+    fitted = evaluator.fit_hw(recs, TPU_V5E)
+    meas = [r.seconds for r in recs]
+    rho0 = evaluator.spearman(
+        [predict(r.plan, TPU_V5E).score for r in recs], meas)
+    rho1 = evaluator.spearman(
+        [predict(r.plan, fitted).score for r in recs], meas)
+    assert rho1 > rho0
+    assert rho1 == pytest.approx(1.0, abs=1e-9)
+
+
+def test_fit_needs_enough_records():
+    hw_true = dataclasses.replace(TPU_V5E, hbm_efficiency=0.05,
+                                  calibrated=True)
+    few = _synthetic_records(hw_true)[:evaluator.MIN_FIT_RECORDS - 1]
+    assert evaluator.fit_hw(few, TPU_V5E) is TPU_V5E
+
+
+def test_calibrated_hw_reads_measure_cache(cache_env):
+    hw_true = dataclasses.replace(TPU_V5E, hbm_efficiency=0.05,
+                                  mxu_efficiency=0.5,
+                                  grid_overhead_s=2e-6, calibrated=True)
+    for rec in _synthetic_records(hw_true):
+        registry.record_measurement(rec)
+    registry.flush()
+    registry.clear_memory()
+    fitted = evaluator.calibrated_hw(TPU_V5E)
+    assert fitted.calibrated
+    assert fitted.hbm_efficiency == pytest.approx(0.05, rel=0.05)
+
+
+def test_spearman_basics():
+    assert evaluator.spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert evaluator.spearman([1, 2, 3], [30, 20, 10]) == pytest.approx(-1.0)
+    assert evaluator.spearman([1, 1, 1], [1, 2, 3]) == 0.0
+
+
+# -- adaptive short-list search ------------------------------------------
+
+
+def test_adaptive_search_stops_early(cache_env, monkeypatch):
+    """With a stable leader the search must NOT measure the whole
+    short-list; the fake stopwatch follows the model ranking."""
+    from repro.core.autotuner import candidate_blocks, make_plan
+    problem = Problem(8, 1024, 1024, "float32")
+    order = {c.tuning_key(): i for i, c in
+             enumerate(candidate_blocks(problem))}
+    assert len(order) >= 6
+    timed = []
+
+    def fake_measure(plan, impl=None, **kw):
+        timed.append(plan.tuning_key())
+        rec = registry.MeasureRecord(
+            plan=plan, seconds=1e-3 * (1 + order[plan.tuning_key()]),
+            iters=kw.get("iters", 1), dispersion=0.0)
+        registry.record_measurement(rec)
+        return rec
+
+    monkeypatch.setattr(evaluator, "measure_plan", fake_measure)
+    best = make_plan(problem, measure="wallclock", top_k=10, stable=2,
+                     persist=False)
+    assert best.chosen_by == "measured"
+    assert order[best.tuning_key()] == 0, "winner must be the fastest"
+    assert len(timed) == 3, "leader stable after 2 challengers -> stop"
+
+
+# -- engine background miss path -----------------------------------------
+
+
+def test_engine_miss_path_commits_in_background(cache_env, monkeypatch):
+    """A registry-miss engine serves off model plans immediately; the
+    measured winners arrive via the background tuner, never measured on
+    the serving thread."""
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import Engine
+
+    threads = []
+    orig = evaluator._time_samples
+
+    def spy(fn, **kw):
+        threads.append(threading.current_thread().name)
+        return orig(fn, **kw)
+
+    monkeypatch.setattr(evaluator, "_time_samples", spy)
+
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=512, d_ff=1024, num_layers=1, vocab_size=512,
+        num_heads=8, num_kv_heads=8, head_dim=64)
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, axes, max_len=32, max_batch=2,
+                 background_tune=True,
+                 tuner_opts=dict(iters=1, warmup=0, top_k=2))
+    outs = eng.serve([{"tokens": np.arange(4, dtype=np.int32)},
+                      {"tokens": np.arange(4, dtype=np.int32)}], steps=2)
+    assert len(outs) == 2 and outs[0].tokens.shape == (1, 2)
+
+    eng.tuner.join(timeout=300)
+    assert not eng.tuner.busy()
+    assert eng.tuner.committed, "background tuner committed nothing"
+    assert threads, "nothing was measured"
+    assert all(t == "repro-bg-tuner" for t in threads), \
+        "measurement ran on the serving thread"
+    for plan in eng.tuner.committed:
+        got = registry.peek(plan.problem.key())
+        assert got is not None and got.chosen_by == "measured"
+    assert len(registry.measurements()) > 0
+
+
+# -- registry instance isolation (the old module-global _STATS bug) ------
+
+
+def test_registry_instances_have_isolated_stats(cache_env):
+    r1 = registry.Registry(plan_path=cache_env / "r1.json")
+    r2 = registry.Registry(plan_path=cache_env / "r2.json")
+    assert r1.get("m8_k512_n256_float32_s1") is None
+    assert r1.stats() == {"hits": 0, "misses": 1}
+    assert r2.stats() == {"hits": 0, "misses": 0}
+    assert registry.stats() == {"hits": 0, "misses": 0}, \
+        "default registry must not see instance lookups"
+    r1.reset_stats()
+    assert r1.stats() == {"hits": 0, "misses": 0}
+
+
+def test_miss_log_drains_once(cache_env):
+    registry.get("m8_k512_n256_float32_s1")
+    registry.get("m8_k512_n256_float32_s1")     # deduped
+    registry.get("m16_k512_n256_float32_s1")
+    drained = registry.drain_misses()
+    assert drained == ["m8_k512_n256_float32_s1", "m16_k512_n256_float32_s1"]
+    assert registry.drain_misses() == []
+    assert Problem.from_key(drained[0]) == Problem(8, 512, 256, "float32")
+
+
+def test_problem_from_key_roundtrip():
+    p = Problem(128, 4096, 64, "bfloat16", num_shards=4)
+    assert Problem.from_key(p.key()) == p
+    with pytest.raises(ValueError):
+        Problem.from_key("not_a_key")

@@ -82,3 +82,55 @@ def test_corrupt_disk_is_ignored_on_merge(cache_file):
     cache_file.write_text("{not json")
     registry.put(_plan(32), persist=True)    # must not raise
     assert len(_disk(cache_file)) == 1
+
+
+def test_merge_prefers_measured_plan_on_disk(cache_file):
+    """Writer B wall-clocked a winner and flushed it; writer A's later
+    model-ranked flush for the same key must NOT clobber it — measured
+    provenance outranks a model re-rank across processes too."""
+    import dataclasses
+    registry.get("warmup")                   # A loads the empty cache
+    measured = dataclasses.replace(_plan(64), chosen_by="measured",
+                                   score=1e-3)
+    cache_file.write_text(json.dumps(
+        {registry._key(measured.problem.key()): measured.to_json()}))
+    model = dataclasses.replace(_plan(64), bk=1024)   # A's model re-rank
+    registry.put(model, persist=True)
+    disk = _disk(cache_file)
+    assert Plan.from_json(disk[registry._key(measured.problem.key())]) \
+        == measured
+    assert registry.get(measured.problem.key()) == measured
+
+
+def _record(m: int, seconds: float) -> registry.MeasureRecord:
+    return registry.MeasureRecord(plan=_plan(m), seconds=seconds, iters=3,
+                                  dispersion=0.1)
+
+
+def test_measurement_cache_two_writers_merge(cache_file, tmp_path,
+                                             monkeypatch):
+    """Two processes measuring different plans against one shared
+    measurement cache must both survive the flush (same NFS contract as
+    plans)."""
+    meas_file = tmp_path / "measurements.json"
+    monkeypatch.setenv("REPRO_MEASURE_CACHE", str(meas_file))
+    registry.clear_memory()
+
+    rec_a = _record(1, 1e-3)
+    registry.record_measurement(rec_a)       # A measures, not yet flushed
+
+    # writer B (separate process): flushed its own record meanwhile
+    rec_b = _record(2, 2e-3)
+    platform = registry._platform()
+    meas_file.write_text(json.dumps(
+        {f"{platform}/{rec_b.key()}": rec_b.to_json()}))
+
+    registry.flush()                         # A's flush must merge B's
+    with open(meas_file) as f:
+        disk = json.load(f)
+    assert f"{platform}/{rec_a.key()}" in disk
+    assert f"{platform}/{rec_b.key()}" in disk, "A clobbered B's measurement"
+    # and B's record is visible to A's own lookups after the merge
+    registry.clear_memory()
+    assert registry.lookup_measurement(rec_b.plan) == rec_b
+    assert len(registry.measurements()) == 2
