@@ -1,50 +1,82 @@
-"""Paper Fig. 8 / §IV-B — install-time inner-kernel (block-shape) selection.
+"""Paper Fig. 8 / §IV-B — install-time inner-kernel selection over the
+kernel-VARIANT registry (DESIGN.md §10).
 
-The paper benchmarks candidate register-blocked kernels (12x8 vs 16x4 vs
-8x4) and keeps the best.  Here the candidates are MXU-aligned Pallas block
-shapes; the predictive model ranks them (VMEM feasibility + DMA/MXU
-utilization) and the performance evaluator measures the short-list.  We
-report: the model's top pick, the measured ranking on this machine's
-blocked-XLA implementation, and whether they agree (on real TPU the
-measured path times the Pallas kernels instead).
+The paper benchmarks competing register-blocked inner kernels (12x8 vs
+16x4 vs 8x4) and keeps the best.  Here the candidates are whole kernel
+schedules: every registered variant (baseline accumulate, k-split partial
+sums, k-major loop order, B-resident, split epilogue, pack-on-the-fly),
+each at its model-best block shape for the gate problem.  Per gate shape
+we print a per-variant timing table and report which variant the
+(optionally calibrated) predictive model picks vs which one the
+measurement picks — the agreement signal the install stage's adaptive
+short-list search relies on.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax.numpy as jnp
-import numpy as np
+from repro.core.autotuner import candidate_blocks
+from repro.core.evaluator import build_callable, calibrated_hw
+from repro.core.hw import TPU_V5E
+from repro.core.plan import Problem
 
 from benchmarks.common import emit, timeit
-from repro.core.autotuner import candidate_blocks
-from repro.core.evaluator import build_callable
-from repro.core.plan import Problem
+
+# the gate shapes: paper-style tall-A prefill panels + a decode-style
+# skinny-A projection
+GATE_PROBLEMS = [
+    Problem(2048, 2048, 16, "float32"),
+    Problem(2048, 2048, 128, "float32"),
+    Problem(64, 2048, 4096, "float32"),
+]
+
+
+def best_per_variant(problem, hw):
+    """Model-best plan for EVERY registered variant spec: candidates come
+    back score-sorted, so the first plan seen per spec is its best block
+    config under the model."""
+    best = {}
+    for plan in candidate_blocks(problem, hw):
+        key = plan.kernel.key()
+        if key not in best:
+            best[key] = plan
+    return best
 
 
 def run():
+    hw = calibrated_hw(TPU_V5E)   # datasheet roofline when the cache is thin
+    mode = "calibrated" if hw.calibrated else "datasheet"
     rows = []
-    problems = [
-        Problem(2048, 2048, 16, "float32"),    # paper-style tall-A
-        Problem(2048, 2048, 128, "float32"),
-        Problem(64, 2048, 4096, "float32"),    # decode-style skinny-A
-    ]
-    for prob in problems:
-        cands = candidate_blocks(prob)[:4]
-        measured = []
-        for plan in cands:
+    for prob in GATE_PROBLEMS:
+        per_variant = best_per_variant(prob, hw)
+        if not per_variant:
+            continue
+        model_pick = min(per_variant.values(), key=lambda p: p.score)
+        timed = []
+        for key, plan in sorted(per_variant.items()):
             t = timeit(build_callable(plan, impl="xla"), warmup=1, iters=3)
-            measured.append((t, plan))
-        measured.sort(key=lambda x: x[0])
-        best_meas = measured[0][1]
-        agree = (best_meas.bm, best_meas.bk, best_meas.bn) == \
-                (cands[0].bm, cands[0].bk, cands[0].bn)
+            timed.append((t, key, plan))
+        timed.sort(key=lambda x: x[0])
+        meas_pick = timed[0][1]
+
+        print(f"\n== {prob.key()} ({mode} model) ==")
+        print(f"{'variant':22s} {'blocks':>18s} {'model_s':>10s} "
+              f"{'measured_s':>11s}")
+        for t, key, plan in timed:
+            mark = []
+            if key == model_pick.kernel.key():
+                mark.append("model-pick")
+            if key == meas_pick:
+                mark.append("measured-pick")
+            print(f"{key:22s} ({plan.bm:5d},{plan.bk:5d},{plan.bn:5d}) "
+                  f"{plan.score:10.3e} {t:11.3e}  {' '.join(mark)}")
+
+        agree = model_pick.kernel.key() == meas_pick
         rows.append((
             f"kernel_select_{prob.key()}",
-            round(measured[0][0] * 1e6, 1),
-            f"model_pick=({cands[0].bm},{cands[0].bk},{cands[0].bn})|"
-            f"measured_pick=({best_meas.bm},{best_meas.bk},{best_meas.bn})|"
-            f"top1_agree={agree}"))
+            round(timed[0][0] * 1e6, 1),
+            f"variants={len(per_variant)}|model_pick={model_pick.kernel.key()}"
+            f"|measured_pick={meas_pick}|top1_agree={agree}"))
+    print()
     return emit(rows)
 
 

@@ -1,10 +1,12 @@
 """The paper's contribution: the AutoTSMM auto-tuning pipeline.
 
-install-time stage: autotuner.candidate_blocks -> vmem_model (Eq.2/3
-analogue) -> evaluator (measure) -> registry (persist); run via
-``python -m repro.core.install``.
-runtime stage: autotuner.make_plan / plan_for_matmul -> Plan ->
-tsmm.tsmm_dot replays it (pre-packed Pallas kernels on TPU).
+install-time stage: autotuner.candidate_blocks (block shapes x the
+kernel-variant registry, DESIGN.md §10) -> vmem_model (Eq.2/3 analogue,
+per-variant cost terms) -> evaluator (measure) -> registry (persist);
+run via ``python -m repro.core.install``.
+runtime stage: autotuner.make_plan / plan_for_matmul -> Plan (block
+shapes + KernelSpec) -> tsmm.tsmm_dot replays it through
+kernels.variants dispatch (pre-packed Pallas kernels on TPU).
 """
 
 from repro.core.autotuner import make_plan, plan_for_matmul

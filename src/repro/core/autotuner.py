@@ -64,7 +64,14 @@ def _ceil_to(x: int, q: int) -> int:
 
 def candidate_blocks(problem: Problem,
                      hw: Optional[HwSpec] = None) -> list[Plan]:
-    """Enumerate feasible candidate plans for one problem."""
+    """Enumerate feasible candidate plans for one problem.
+
+    The search space is the cross product of block shapes x registered
+    kernel variants (kernels/variants, DESIGN.md §10) — the paper's
+    install-time selection among competing inner kernels, not just among
+    blockings of one kernel.  Candidates are model-ranked; the measured
+    short-list then times whichever variants survive the prune."""
+    from repro.kernels.variants import specs_for  # lazy: seeds the registry
     hw = hw or default_hw()
     orientation = "tall_a" if problem.skinny_dim == "n" else "skinny_a"
     sl = hw.sublane.get(problem.dtype, 8)
@@ -90,7 +97,26 @@ def candidate_blocks(problem: Problem,
                     continue
                 cands.append(Plan(problem, "skinny_a", bm=problem.m, bk=bk, bn=bn))
 
-    out = [predict(c, hw) for c in cands if feasible(c, hw)]
+    # kernel-variant axis: every block candidate x every registered spec
+    # applicable to its (orientation, prepack); baseline-first spec order
+    # keeps ties deterministic under the stable sort below
+    expanded = []
+    for c in cands:
+        for spec in specs_for(c.orientation, c.prepack):
+            expanded.append(
+                c if spec == c.kernel else dataclasses.replace(c, kernel=spec))
+        if c.orientation == "skinny_a" and c.prepack:
+            # the natural-weight call path re-packs per call: model it as
+            # a prepack=False sibling so pack-on-the-fly variants
+            # (fused_pack) compete — the model charges every re-packing
+            # prepack=False candidate the per-call pack traffic, so these
+            # never outrank their prepack=True twins on ties (they are
+            # appended after, and the sort below is stable)
+            cf = dataclasses.replace(c, prepack=False)
+            for spec in specs_for("skinny_a", prepack=False):
+                expanded.append(dataclasses.replace(cf, kernel=spec))
+
+    out = [predict(c, hw) for c in expanded if feasible(c, hw)]
     out.sort(key=lambda p: p.score)
     return out
 

@@ -33,7 +33,7 @@ from repro.core.hw import TPU_V5E, HwSpec
 from repro.core.plan import Plan
 from repro.core.registry import MeasureRecord, Registry
 from repro.core.vmem_model import features
-from repro.kernels import ops
+from repro.kernels import ops, variants
 
 # fit_hw needs at least this many cached records before it trusts a fit
 MIN_FIT_RECORDS = 4
@@ -71,21 +71,34 @@ def build_callable(plan: Plan, impl: Optional[str] = None) -> Callable:
     prepack=False candidates look free.  Tall-A activations are packed
     per call by ``tsmm_dot`` as well, but that operand IS the streamed
     input; the model amortizes it (Eq.7) and we keep it outside the
-    region for both variants so tall-A candidates stay comparable."""
+    region for both variants so tall-A candidates stay comparable.
+
+    Kernel-variant fidelity (DESIGN.md §10): the callable dispatches
+    through ``kernels.variants.run_*`` with the plan's ``kernel`` spec —
+    the SAME registry entry point ``tsmm_dot`` replays at serving time —
+    so the stopwatch times exactly the variant the plan records."""
     p = plan.problem
     a, b = _materialize(plan)
     impl = resolve_impl(impl)
+    spec = plan.kernel
     if plan.orientation == "tall_a":
         if plan.prepack:
             ap = jax.block_until_ready(ops.pack_blocks(a, plan.bm, plan.bk))
-            return lambda: ops.tsmm_packed(ap, b, impl=impl)
-        return lambda: ops.tsmm(a, b, bm=plan.bm, bk=plan.bk, impl=impl)
+            return lambda: variants.run_tall_a(spec, ap, b, bm=plan.bm,
+                                               bk=plan.bk, packed=True,
+                                               impl=impl)
+        return lambda: variants.run_tall_a(spec, a, b, bm=plan.bm,
+                                           bk=plan.bk, packed=False,
+                                           impl=impl)
     if plan.prepack:
         wp = jax.block_until_ready(ops.pack_blocks(b, plan.bk, plan.bn))
-        return lambda: ops.tsmm_skinny(a, wp, impl=impl)
-    # tsmm_dot re-packs an unpacked skinny weight every call: time that.
-    return lambda: ops.tsmm_skinny(
-        a, packing.pack(b, plan.bk, plan.bn).blocks, impl=impl)
+        return lambda: variants.run_skinny_a(spec, a, wp, bk=plan.bk,
+                                             bn=plan.bn, packed=True,
+                                             impl=impl)
+    # tsmm_dot re-packs an unpacked skinny weight every call: the variant
+    # owns that per-call cost (fused_pack skips it) — time it.
+    return lambda: variants.run_skinny_a(spec, a, b, bk=plan.bk, bn=plan.bn,
+                                         packed=False, impl=impl)
 
 
 def parity_check(plan: Plan, impl: Optional[str] = None,
@@ -105,7 +118,10 @@ def parity_check(plan: Plan, impl: Optional[str] = None,
     timed = np.asarray(jax.block_until_ready(fn()),
                        np.float32)[:p.m, :p.n]
     if plan.orientation == "skinny_a" and plan.prepack:
-        served = tsmm_dot(a, packing.pack(b, plan.bk, plan.bn), impl=rimpl)
+        # packed serving path; the explicit plan pins the kernel variant
+        # (a candidate under measurement is not in the registry yet)
+        served = tsmm_dot(a, packing.pack(b, plan.bk, plan.bn), plan=plan,
+                          impl=rimpl)
     else:
         served = tsmm_dot(a, b, plan=plan, impl=rimpl)
     served = np.asarray(served, np.float32)[:p.m, :p.n]

@@ -238,6 +238,22 @@ def main(argv=None):
             sys.exit(1)
         print(f"check ok: {stats['hits']} lookups, all hits "
               f"-> {cache_path()}")
+        # kernel-variant self-check (DESIGN.md §10): run EVERY registered
+        # variant in interpret mode on one tiny shape — an unloadable or
+        # numerically broken variant must fail the workflow before a
+        # tuned registry can ever point serving at it.
+        from repro.kernels.variants import verify_variants
+        rows = verify_variants(impl="pallas_interpret")
+        bad = [r for r in rows if not r["ok"]]
+        for r in rows:
+            status = "ok" if r["ok"] else f"FAILED ({r['error']})"
+            print(f"variant {r['spec']:20s} {r['orientation']:9s} {status}")
+        if bad:
+            print(f"CHECK FAILED: {len(bad)}/{len(rows)} kernel variants "
+                  f"broken")
+            sys.exit(1)
+        print(f"variant check ok: {len(rows)} registered variant entries "
+              f"verified in interpret mode")
         return
 
     if args.calibrate:

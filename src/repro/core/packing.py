@@ -28,14 +28,25 @@ class PackedTensor:
 
     blocks: (*lead, n0, n1, b0, b1) where the original matrix is
     (*lead, n0*b0 - pad0, n1*b1 - pad1).
+
+    ``kernel_specs`` is the serving-replay stamp (DESIGN.md §10): sorted
+    ``(batch_bucket, KernelSpec)`` pairs recording which inner-kernel
+    variant the autotuner chose per bucket when this weight was packed
+    (``core.tsmm.prepack_for``).  It rides in the pytree aux (static,
+    hashable), so the decode path replays the recorded variant without
+    re-deriving the registry key — which a sharded engine could not do
+    (its plans are keyed by per-shard dims and num_shards).  Empty for
+    manually packed tensors.
     """
 
     blocks: jnp.ndarray
     orig_rows: int      # pre-padding
     orig_cols: int
+    kernel_specs: tuple = ()
 
     def tree_flatten(self):
-        return (self.blocks,), (self.orig_rows, self.orig_cols)
+        return (self.blocks,), (self.orig_rows, self.orig_cols,
+                                self.kernel_specs)
 
     @classmethod
     def tree_unflatten(cls, aux, children):

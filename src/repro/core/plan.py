@@ -15,6 +15,10 @@ import json
 import re
 from typing import Mapping, Optional
 
+# jax-free by design: the spec module carries no kernel code, so Plan can
+# name a variant without dragging the Pallas generators (or jax) in.
+from repro.kernels.variants.spec import KernelSpec
+
 
 @dataclasses.dataclass(frozen=True)
 class Problem:
@@ -75,6 +79,10 @@ class Plan:
     impl: str = "auto"        # pallas | pallas_interpret | xla | auto
     prepack: bool = True      # pre-pack the tall operand
     shard_tall: bool = True   # distribute the tall dim over num_shards
+    # which member of the inner-kernel family executes this plan — the
+    # variant dimension of the search space (kernels/variants, DESIGN.md
+    # §10); defaults to the baseline so pre-variant records stay valid
+    kernel: KernelSpec = KernelSpec()
     # predicted roofline terms (seconds) from the cost model
     t_compute: float = 0.0
     t_memory: float = 0.0
@@ -92,25 +100,37 @@ class Plan:
     def tuning_key(self) -> str:
         """The tunable-choice part of a plan's identity — what the
         measurement cache is keyed by (together with the problem key):
-        two plans with the same tuning key execute the same program."""
-        return (f"{self.orientation}_bm{self.bm}_bk{self.bk}_bn{self.bn}"
+        two plans with the same tuning key execute the same program.
+
+        The kernel variant extends the key, so a measured baseline plan
+        and a model-ranked variant plan can never collide in the
+        measurement cache; a baseline spec adds no suffix, so records
+        cached before the variant axis existed keep matching."""
+        base = (f"{self.orientation}_bm{self.bm}_bk{self.bk}_bn{self.bn}"
                 f"_pp{int(self.prepack)}_{self.impl}")
+        if not self.kernel.is_baseline:
+            base += f"_kv:{self.kernel.key()}"
+        return base
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
+        d["kernel"] = self.kernel.to_json()
         return d
 
     @staticmethod
     def from_json(d: dict) -> "Plan":
         d = dict(d)
         d["problem"] = Problem(**d["problem"])
+        # pre-variant records carry no "kernel" key: default to baseline
+        d["kernel"] = KernelSpec.from_json(d.get("kernel"))
         return Plan(**d)
 
     def __str__(self) -> str:
         p = self.problem
         return (f"Plan[{p.key()} {self.orientation} blocks=({self.bm},{self.bk},"
-                f"{self.bn}) grid={self.grid} impl={self.impl} "
-                f"prepack={self.prepack} t_c={self.t_compute:.2e}s "
+                f"{self.bn}) grid={self.grid} kernel={self.kernel.key()} "
+                f"impl={self.impl} prepack={self.prepack} "
+                f"t_c={self.t_compute:.2e}s "
                 f"t_m={self.t_memory:.2e}s by={self.chosen_by}]")
 
 

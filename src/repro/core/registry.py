@@ -12,7 +12,11 @@ cache over NFS:
   a wall-clocked winner with a model-ranked loser.
 * **measurements** — keyed ``platform/problem.key()/plan.tuning_key()``,
   one :class:`MeasureRecord` (min-of-iters seconds, iteration count,
-  dispersion, provenance) per timed candidate.  This is the evaluator's
+  dispersion, provenance) per timed candidate.  The tuning key includes
+  the kernel-variant spec (DESIGN.md §10), so a measured baseline plan
+  and a model-ranked variant plan occupy distinct slots, and plan
+  records written before the variant axis existed decode with the
+  baseline spec (``Plan.from_json`` back-compat).  This is the evaluator's
   cache: repeated ``--measure`` sweeps reuse old timings, and the
   calibration fit (DESIGN.md §9) regresses over ALL records, so a handful
   of measurements improves the ranking of every un-measured shape.

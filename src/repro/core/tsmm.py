@@ -18,6 +18,7 @@ scale:
 
 from __future__ import annotations
 
+import dataclasses
 import os
 from typing import Optional
 
@@ -34,11 +35,48 @@ from repro.core.hw import TPU_V5E, HwSpec
 from repro.core.packing import PackedTensor, is_packed, pack
 from repro.core.plan import Plan, Problem, is_tsmm
 from repro.core.vmem_model import feasible, predict
-from repro.kernels import ops
+from repro.kernels import ops, variants
+from repro.kernels.variants import KernelSpec
 
 
 def impl_choice() -> str:
+    """``REPRO_TSMM_IMPL`` override (pallas | pallas_interpret | xla |
+    auto).  See :func:`variant_choice` for the kernel-variant analogue."""
     return os.environ.get("REPRO_TSMM_IMPL", "auto")
+
+
+def variant_choice() -> Optional[KernelSpec]:
+    """``REPRO_TSMM_VARIANT`` override — force a named kernel variant on
+    every planned TSMM for debugging/bisection (DESIGN.md §10).
+
+    Syntax: ``name`` or ``name:key=val,key2=val2`` — e.g. ``ksplit`` or
+    ``ksplit:splits=4``.  Raises ``ValueError`` listing the registered
+    variants on an unknown name, so a typo fails loudly instead of
+    silently serving the baseline.  An orientation-specific variant
+    (kmajor, b_resident, epilogue_split, fused_pack) only overrides the
+    matmuls of its own regime — a real model run exercises both regimes,
+    so the other one keeps its planned kernel."""
+    raw = os.environ.get("REPRO_TSMM_VARIANT", "")
+    if not raw:
+        return None
+    return variants.parse_spec(raw)
+
+
+def _override_spec(spec: KernelSpec, override: Optional[KernelSpec],
+                   orientation: str) -> KernelSpec:
+    if override is not None and variants.applies_to(override, orientation):
+        return override
+    return spec
+
+
+def _stamped_spec(b: PackedTensor, m: int) -> Optional[KernelSpec]:
+    """The kernel spec ``prepack_for`` stamped on the packed weight for
+    the smallest batch bucket covering ``m`` (None when unstamped or
+    past the largest bucket — callers fall through to the registry)."""
+    for bucket, spec in getattr(b, "kernel_specs", ()):
+        if bucket >= m:
+            return spec
+    return None
 
 
 def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
@@ -50,6 +88,7 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
     'runtime stage' of the paper runs once per compiled program.
     """
     impl = impl or impl_choice()
+    override = variant_choice()
     lead, k = a.shape[:-1], a.shape[-1]
     m = 1
     for d in lead:
@@ -57,7 +96,7 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
     a2 = a.reshape(m, k)
 
     if is_packed(b):
-        nk, _, bk, _ = b.blocks.shape[-4:]
+        nk, _, bk, bn = b.blocks.shape[-4:]
         if k == nk * bk:
             # 2D-TP serving: k-shard the skinny activation panel to match
             # the weight's row-block sharding -> partial sums + psum of the
@@ -65,7 +104,23 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
             from repro.sharding.context import shard_act
             a2 = shard_act(a2.reshape(m, nk, bk), "batch", "kblocks", None
                            ).reshape(m, k)
-        out = ops.tsmm_skinny(a2, b.blocks, bias, act=act, impl=impl)
+        spec = plan.kernel if plan is not None else None
+        if spec is None:
+            # serving replay of the registry's recorded winner: the
+            # variant chosen when the weight was packed is stamped on the
+            # PackedTensor (num_shards/dtype-proof — prepack_for keyed
+            # the tuned problems correctly, whatever the sharding)...
+            spec = _stamped_spec(b, m)
+        if spec is None:
+            # ...and a manually packed tensor falls back to a registry
+            # peek (non-mutating, so the engine's miss telemetry stays
+            # honest); an uncovered shape serves the baseline.
+            cached = registry.peek(
+                Problem(m, k, b.orig_cols, str(a.dtype)).key())
+            spec = cached.kernel if cached is not None else variants.BASELINE
+        spec = _override_spec(spec, override, "skinny_a")
+        out = variants.run_skinny_a(spec, a2, b.blocks, bias, act,
+                                    bk=bk, bn=bn, packed=True, impl=impl)
         out = out[:, : b.orig_cols]
         return out.reshape(*lead, b.orig_cols)
 
@@ -73,15 +128,19 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
     if plan is None and is_tsmm(m, k, n):
         plan = plan_for_matmul(m, k, n, str(a.dtype))
     if plan is not None and plan.orientation == "skinny_a":
-        bp = pack(b, plan.bk, plan.bn)
-        out = ops.tsmm_skinny(a2, bp.blocks, bias, act=act, impl=impl)
+        spec = _override_spec(plan.kernel, override, "skinny_a")
+        out = variants.run_skinny_a(spec, a2, b, bias, act, bk=plan.bk,
+                                    bn=plan.bn, packed=False, impl=impl)
         return out[:, :n].reshape(*lead, n)
     if plan is not None and plan.orientation == "tall_a":
+        spec = _override_spec(plan.kernel, override, "tall_a")
         if plan.prepack:
             ap = pack(a2, plan.bm, plan.bk)
-            out = ops.tsmm_packed(ap.blocks, b, impl=impl)[:m]
+            out = variants.run_tall_a(spec, ap.blocks, b, bm=plan.bm,
+                                      bk=plan.bk, packed=True, impl=impl)[:m]
         else:
-            out = ops.tsmm(a2, b, bm=plan.bm, bk=plan.bk, impl=impl)
+            out = variants.run_tall_a(spec, a2, b, bm=plan.bm, bk=plan.bk,
+                                      packed=False, impl=impl)
     else:
         # accumulate in f32 like every planned path (ops.tsmm* all pass
         # preferred_element_type) so bf16 results do not depend on whether
@@ -138,7 +197,39 @@ def prepack_for(m_skinny, w, *, num_shards: int = 1,
     chosen = _conforming_blocks(problems, ks, ns, hw, caps=caps)
     if chosen is None:
         return None
-    return pack(w, *chosen)
+    pk = pack(w, *chosen)
+    # stamp the per-bucket kernel variants on the packed weight so the
+    # decode path replays exactly what was tuned (DESIGN.md §10) — the
+    # registry key is shard/dtype-specific, but the stamp travels with
+    # the weight.  Each spec is RE-GATED at the conforming blocks the
+    # tensor was actually packed with (which may differ from the blocks
+    # the plan was tuned at): an infeasible or prepack=False-only
+    # variant falls back to the baseline instead of replaying a schedule
+    # that was never validated at this layout.
+    pk.kernel_specs = tuple(sorted(
+        (m, _stamp_spec_for_blocks(pset.plans[m], *chosen, hw=hw))
+        for m in pset.plans))
+    return pk
+
+
+def _stamp_spec_for_blocks(plan: Plan, bk: int, bn: int, *,
+                           hw: Optional[HwSpec] = None) -> KernelSpec:
+    """``plan``'s tuned kernel variant, re-validated for a PACKED weight
+    with blocks (bk, bn): a spec with no packed-path applicability
+    (fused_pack — there is no per-call pack left to fuse) or one that is
+    infeasible at these blocks (e.g. a k-split that no longer divides
+    the k-block count, or VMEM blown at the bigger block) degrades to
+    the baseline, which is always valid."""
+    spec = plan.kernel
+    if spec.is_baseline:
+        return spec
+    entry = variants.get_variant(spec.name).orientations.get("skinny_a")
+    if entry is None or entry.requires_prepack is False:
+        return KernelSpec()
+    trial = dataclasses.replace(plan, bk=bk, bn=bn, prepack=True)
+    if not feasible(trial, hw or default_hw()):
+        return KernelSpec()
+    return spec
 
 
 def _conforming_blocks(problems, ks: int, ns: int, hw: HwSpec = TPU_V5E,

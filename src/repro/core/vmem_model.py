@@ -40,25 +40,60 @@ def _ceil(a, b):
     return -(-a // b)
 
 
+def _variant(plan: Plan) -> tuple:
+    """(variant name, params) — the kernel dimension of the cost model
+    (DESIGN.md §10)."""
+    return plan.kernel.name, dict(plan.kernel.params)
+
+
+def contraction_steps(plan: Plan) -> int:
+    """SERIAL k-axis steps the variant's schedule executes — the unit the
+    fitted per-step overhead multiplies (``HwSpec.grid_overhead_s``).
+    A k-split runs its partial sums in parallel, so each chain is
+    ``nk / splits`` long; every other variant walks all nk blocks."""
+    nk = plan.grid[1]
+    name, params = _variant(plan)
+    if name == "ksplit":
+        return max(1, nk // max(1, params.get("splits", 2)))
+    return nk
+
+
 def vmem_bytes_needed(plan: Plan, hw: HwSpec = TPU_V5E) -> int:
     """Working set of one grid step, with 2x double buffering on streamed
     operands and a single fp32 accumulator (the Pallas pipeline's actual
-    residency)."""
+    residency).  Variant-aware: ``b_resident`` holds the WHOLE skinny
+    operand (no double buffering — it is never swapped), ``kmajor`` trades
+    the VMEM accumulator for an fp32 output block, and the k-split
+    variants stream fp32 partial blocks out."""
     p = plan.problem
     eb = dtype_bytes(p.dtype)
+    name, _ = _variant(plan)
     if plan.orientation == "tall_a":
         n_pad = _ceil(p.n, 128) * 128
-        a_blk = plan.bm * plan.bk * eb
-        b_blk = plan.bk * n_pad * eb
+        a = 2 * plan.bm * plan.bk * eb
+        b = 2 * plan.bk * n_pad * eb
         acc = plan.bm * n_pad * 4
-        out = plan.bm * n_pad * eb
+        out = 2 * plan.bm * n_pad * eb
+        if name == "b_resident":
+            b = _ceil(p.k, plan.bk) * plan.bk * n_pad * eb   # full B, once
+        elif name == "kmajor":
+            # no VMEM scratch, but the aliased fp32 accumulator streams
+            # through as BOTH an input block and the output block
+            # (input_output_aliases shares HBM, not the VMEM windows)
+            acc = 2 * plan.bm * n_pad * 4
+            out = 2 * plan.bm * n_pad * 4
+        elif name == "ksplit":
+            out = 2 * plan.bm * n_pad * 4                    # fp32 partials
     else:  # skinny_a
-        m_pad = _ceil(p.m, hw.sublane.get(p.dtype, 8)) * hw.sublane.get(p.dtype, 8)
-        a_blk = m_pad * plan.bk * eb          # streamed X panel
-        b_blk = plan.bk * plan.bn * eb        # streamed W block
+        sl = hw.sublane.get(p.dtype, 8)
+        m_pad = _ceil(p.m, sl) * sl
+        a = 2 * m_pad * plan.bk * eb          # streamed X panel
+        b = 2 * plan.bk * plan.bn * eb        # streamed W block
         acc = m_pad * plan.bn * 4
-        out = m_pad * plan.bn * eb
-    return 2 * (a_blk + b_blk) + acc + 2 * out
+        out = 2 * m_pad * plan.bn * eb
+        if name == "ksplit":
+            out = 2 * m_pad * plan.bn * 4                    # fp32 partials
+    return a + b + acc + out
 
 
 def feasible(plan: Plan, hw: HwSpec = TPU_V5E) -> bool:
@@ -71,26 +106,70 @@ def feasible(plan: Plan, hw: HwSpec = TPU_V5E) -> bool:
     sl = hw.sublane.get(p.dtype, 8)
     if plan.orientation == "tall_a" and plan.bm % sl:
         return False
+    name, params = _variant(plan)
+    if name == "ksplit":
+        # the split must cut the k-block count evenly into >= 2 chains,
+        # or the schedule degenerates to the baseline
+        splits = params.get("splits", 2)
+        nk = plan.grid[1]
+        if splits < 2 or nk % splits or nk // splits < 1:
+            return False
     return vmem_bytes_needed(plan, hw) <= hw.vmem_bytes * VMEM_USABLE_FRACTION
 
 
 def hbm_traffic_bytes(plan: Plan) -> int:
-    """Total HBM bytes moved by one execution of the plan (compute only —
-    pre-pack traffic is a one-time cost amortized over reuse; see
-    cache-complexity analysis, paper Eq.4-6)."""
+    """Total HBM bytes moved by one execution of the plan.
+
+    Variant-aware (DESIGN.md §10): the kernel dimension of the search
+    space changes WHERE bytes move, and these per-variant terms are what
+    ``fit_hw`` calibrates through (they flow into the memory-seconds
+    regressor of :func:`features`):
+
+    * ``ksplit`` streams fp32 partials out and reads them back for the
+      fused reduction (the k-split reduction traffic);
+    * ``kmajor`` fetches each B panel ONCE per k step but revisits the
+      fp32 output every step;
+    * ``b_resident`` loads B exactly once (no per-row-panel reload);
+    * ``fused_pack`` skips the per-call pack of a prepack=False skinny
+      weight (2x the weight bytes) that every re-packing variant pays;
+    * pre-pack traffic of a ``prepack=True`` operand stays a one-time
+      cost amortized over reuse (paper Eq.7) and is NOT counted here.
+    """
     p = plan.problem
     eb = dtype_bytes(p.dtype)
+    name, params = _variant(plan)
     if plan.orientation == "tall_a":
         nm, nk = _ceil(p.m, plan.bm), _ceil(p.k, plan.bk)
+        n_pad = _ceil(p.n, 128) * 128
         a = nm * nk * plan.bm * plan.bk * eb              # each A block once
-        b = nm * nk * plan.bk * _ceil(p.n, 128) * 128 * eb  # B reloaded per row
-        c = nm * plan.bm * _ceil(p.n, 128) * 128 * eb
+        b = nm * nk * plan.bk * n_pad * eb                # B reloaded per row
+        c = nm * plan.bm * n_pad * eb
+        if name == "ksplit":
+            splits = max(1, params.get("splits", 2))
+            parts = splits * nm * plan.bm * n_pad * 4
+            c = 2 * parts + nm * plan.bm * n_pad * eb     # write+read partials,
+        elif name == "kmajor":                            # write final
+            b = nk * plan.bk * n_pad * eb                 # B once per k step
+            c = ((2 * nk - 1) * nm * plan.bm * n_pad * 4  # fp32 revisits
+                 + nm * plan.bm * n_pad * (4 + eb))       # final cast pass
+        elif name == "b_resident":
+            b = nk * plan.bk * n_pad * eb                 # B loaded once
     else:
         nn, nk = _ceil(p.n, plan.bn), _ceil(p.k, plan.bk)
         m_pad = max(p.m, 8)
         a = nn * nk * m_pad * plan.bk * eb                # X reloaded per col
         b = nn * nk * plan.bk * plan.bn * eb              # each W block once
         c = nn * m_pad * plan.bn * eb
+        if name == "ksplit":
+            splits = max(1, params.get("splits", 2))
+            parts = splits * m_pad * nn * plan.bn * 4
+            c = 2 * parts + nn * m_pad * plan.bn * eb
+        elif name == "epilogue_split":
+            c = 3 * nn * m_pad * plan.bn * eb             # extra read+write pass
+        if not plan.prepack and name != "fused_pack":
+            # a prepack=False skinny plan re-packs the weight every call
+            # (tsmm_dot replay fidelity, DESIGN.md §9): read + write W
+            b += 2 * nk * plan.bk * nn * plan.bn * eb
     return a + b + c
 
 
@@ -119,17 +198,19 @@ def features(plan: Plan, hw: HwSpec = TPU_V5E) -> tuple:
     + k_steps * grid_overhead_s`` — linear in the three coefficients."""
     base = nominal(hw)
     return (memory_time_s(plan, base), compute_time_s(plan, base),
-            float(plan.grid[1]))
+            float(contraction_steps(plan)))
 
 
 def predict(plan: Plan, hw: HwSpec = TPU_V5E) -> Plan:
     """Attach predicted times + a scalar score (lower = better).
 
-    The overhead term counts CONTRACTION steps (``grid[1]``, the k-axis):
-    output-tile steps pipeline against the operand DMAs, but every extra
-    k-block serializes another partial-sum accumulation (on the XLA
-    fallback, another pass over the fp32 accumulator) — measurements
-    show the k-split, not the output split, is what costs.
+    The overhead term counts SERIAL contraction steps
+    (:func:`contraction_steps` — the k-axis, divided by the split factor
+    for k-split variants): output-tile steps pipeline against the operand
+    DMAs, but every extra k-block serializes another partial-sum
+    accumulation (on the XLA fallback, another pass over the fp32
+    accumulator) — measurements show the k-split, not the output split,
+    is what costs.
 
     Uncalibrated: the classic ``max(compute, memory)`` roofline.  A
     calibrated ``hw`` uses the additive form the least-squares fit solved
@@ -137,7 +218,7 @@ def predict(plan: Plan, hw: HwSpec = TPU_V5E) -> Plan:
     is not linear in its coefficients, so it cannot be fitted directly)."""
     t_c = compute_time_s(plan, hw)
     t_m = memory_time_s(plan, hw)
-    nk = plan.grid[1]
+    nk = contraction_steps(plan)
     base = (t_c + t_m) if hw.calibrated else max(t_c, t_m)
     score = base + nk * hw.grid_overhead_s
     return dataclasses.replace(plan, t_compute=t_c, t_memory=t_m, score=score)

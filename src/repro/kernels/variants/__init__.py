@@ -1,0 +1,144 @@
+"""Inner-kernel variant subsystem (DESIGN.md §10).
+
+Turns the inner kernel from a hard-coded function into a first-class,
+enumerable, persisted tuning axis: a :class:`KernelSpec` names one member
+of the kernel family, ``register_variant`` maps (name, orientation) to a
+parameterized kernel generator, and the autotuner crosses the registered
+specs with its block-shape candidates.  ``run_tall_a``/``run_skinny_a``
+are the single dispatch points — ``core.tsmm.tsmm_dot`` (serving) and
+``core.evaluator.build_callable`` (timing) both route through them, so
+the evaluator times exactly the kernel serving replays.
+
+This ``__init__`` imports only the jax-free spec module; the kernel
+generator modules load lazily on first registry use.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.variants.spec import (BASELINE, BASELINE_NAME, KernelSpec,
+                                         OrientationEntry, VariantDef,
+                                         get_variant, parse_spec,
+                                         register_variant, specs_for,
+                                         variant_names)
+
+__all__ = [
+    "BASELINE", "BASELINE_NAME", "KernelSpec", "OrientationEntry",
+    "VariantDef", "applies_to", "get_variant", "parse_spec",
+    "register_variant", "specs_for", "variant_names", "run_tall_a",
+    "run_skinny_a", "verify_variants",
+]
+
+
+def applies_to(spec: KernelSpec, orientation: str) -> bool:
+    """Whether the variant ``spec`` names has an implementation for
+    ``orientation`` — the gate the REPRO_TSMM_VARIANT override uses so
+    forcing an orientation-specific variant (kmajor, fused_pack, ...)
+    only rebinds the matching regime instead of crashing the other."""
+    return orientation in get_variant(spec.name).orientations
+
+
+def run_tall_a(spec: KernelSpec, a, b, *, bm: int = 0, bk: int = 0,
+               packed: bool = False, impl=None):
+    """Dispatch a tall-A matmul to the variant ``spec`` names.
+
+    ``a`` is natural (M, K) or pre-packed (nm, nk, bm, bk) per ``packed``
+    (the caller owns the pack, mirroring the baseline's cost placement).
+    """
+    entry = get_variant(spec.name).entry("tall_a")
+    return entry.fn(a, b, bm=bm, bk=bk, packed=packed, impl=impl,
+                    **spec.kwargs())
+
+
+def run_skinny_a(spec: KernelSpec, x, w, bias=None, act=None, *,
+                 bk: int = 0, bn: int = 0, packed: bool = True, impl=None):
+    """Dispatch a skinny-A (decode) matmul to the variant ``spec`` names.
+
+    ``w`` is the packed (nk, nn, bk, bn) blocks when ``packed`` else the
+    natural (K, N) weight.  A ``fused_pack`` spec against an
+    already-packed weight falls back to the baseline kernel inside the
+    variant (there is no pack left to fuse).
+    """
+    entry = get_variant(spec.name).entry("skinny_a")
+    return entry.fn(x, w, bias, act, bk=bk, bn=bn, packed=packed, impl=impl,
+                    **spec.kwargs())
+
+
+# ---------------------------------------------------------------------------
+# registry self-check (install --check / CI)
+# ---------------------------------------------------------------------------
+
+
+def verify_variants(impl: str = "pallas_interpret", *,
+                    dtype: str = "float32") -> list:
+    """Run EVERY registered (variant, orientation, param-combo) on one
+    tiny shape and compare against the jnp reference.
+
+    Returns a list of result dicts ``{spec, orientation, ok, error}`` —
+    the install stage's ``--check`` fails the workflow when any entry has
+    ``ok=False``, so an unloadable or numerically broken variant cannot
+    reach a tuned registry.  ``impl='pallas_interpret'`` exercises the
+    actual kernel bodies on CPU."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+    from repro.kernels.variants.spec import _registry
+
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.dtype(dtype)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == "bfloat16" else \
+        dict(rtol=2e-4, atol=2e-4)
+    rng = np.random.default_rng(0)
+
+    def mk(shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32)
+                           ).astype(dt)
+
+    # one tiny problem per regime; blocks sized so every variant's
+    # constraints (k-split divisibility, VMEM residency) are exercised
+    a, bt = mk((256, 512)), mk((512, 8))          # tall: M=256, K=512, N=8
+    x, w = mk((4, 512)), mk((512, 256))           # skinny: m=4, K=512, N=256
+    bias = mk((256,))
+    want_tall = np.asarray(
+        jnp.dot(a.astype(jnp.float32), bt.astype(jnp.float32)), np.float32)
+    want_skinny = np.asarray(
+        jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+        + bias.astype(jnp.float32)[None, :], np.float32)
+
+    out = []
+    for name in sorted(_registry()):
+        vdef = get_variant(name)
+        for orientation, entry in sorted(vdef.orientations.items()):
+            from repro.kernels.variants.spec import _expand_grid
+            for combo in _expand_grid(entry.param_grid) or [{}]:
+                spec = KernelSpec.make(name, **combo)
+                row = {"spec": spec.key(), "orientation": orientation,
+                       "ok": True, "error": ""}
+                try:
+                    if orientation == "tall_a":
+                        for packed in (False, True):
+                            arg = (ops.pack_blocks(a, 128, 128) if packed
+                                   else a)
+                            got = run_tall_a(spec, arg, bt, bm=128, bk=128,
+                                             packed=packed, impl=impl)
+                            np.testing.assert_allclose(
+                                np.asarray(got, np.float32)[:256, :8],
+                                want_tall, **tol)
+                    else:
+                        pre = entry.requires_prepack
+                        modes = ((False,) if pre is False
+                                 else (True,) if pre is True
+                                 else (True, False))
+                        for packed in modes:
+                            arg = (ops.pack_blocks(w, 128, 128) if packed
+                                   else w)
+                            got = run_skinny_a(spec, x, arg, bias, None,
+                                               bk=128, bn=128, packed=packed,
+                                               impl=impl)
+                            np.testing.assert_allclose(
+                                np.asarray(got, np.float32)[:4, :256],
+                                want_skinny, **tol)
+                except Exception as e:  # a broken variant must not abort the sweep
+                    row["ok"] = False
+                    row["error"] = f"{type(e).__name__}: {e}"
+                out.append(row)
+    return out

@@ -1,0 +1,175 @@
+"""Skinny-A regime kernel variants (DESIGN.md §10).
+
+Each registered function is one competing inner kernel for the decode
+hot path (X (m,K) skinny x W (K,N) wide weight).  Shared contract:
+
+    fn(x, w, bias=None, act=None, *, bk, bn, packed, impl, **params)
+
+``w`` is the packed (nk, nn, bk, bn) block-major weight when ``packed``
+is True (the serving path: packed once at load), or the natural (K, N)
+weight when False — in that case the variant OWNS the per-call layout
+cost: baseline/ksplit/epilogue_split re-pack eagerly on every call
+(exactly what ``tsmm_dot`` replays, so the evaluator times it), while
+``fused_pack`` reads the natural layout inside the kernel and skips the
+pack pass entirely.  Returns (m, nn*bn) — the caller slices padded
+columns, as with ``ops.tsmm_skinny``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels import ops
+from repro.kernels import ref as _ref
+from repro.kernels import tsmm as _k
+from repro.kernels.ops import _ceil_to
+from repro.kernels.variants.spec import register_variant
+from repro.kernels.variants.tall import split_divisor
+
+
+def _pad_bias(bias, n: int):
+    if bias is None:
+        return None
+    return jnp.pad(bias, (0, n - bias.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# baseline — fused-epilogue packed-W kernel (the PR-3 kernel)
+# ---------------------------------------------------------------------------
+
+
+@register_variant("baseline", "skinny_a",
+                  doc="packed-W fused bias+activation epilogue (the "
+                      "original decode kernel)")
+def skinny_baseline(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
+                    packed: bool = True, impl=None):
+    if not packed:
+        # per-call pack — deliberately eager so the evaluator's timed
+        # region pays it (prepack=False replay fidelity, DESIGN.md §9)
+        w = packing.pack(w, bk, bn).blocks
+    return ops.tsmm_skinny(x, w, bias, act=act, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# epilogue_split — plain matmul kernel + separate epilogue pass
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def _split_epilogue(out, bias, act):
+    """Second pass over the CAST output (the kernel already wrote the
+    result in the output dtype): bias+act on the VPU, extra read+write."""
+    o = out.astype(jnp.float32)
+    if bias is not None:
+        o = o + bias.astype(jnp.float32)[None, :]
+    return _ref.act_ref(o, act).astype(out.dtype)
+
+
+@register_variant("epilogue_split", "skinny_a",
+                  doc="matmul kernel + separate bias/activation pass "
+                      "(epilogue NOT fused)")
+def skinny_epilogue_split(x, w, bias=None, act=None, *, bk: int = 0,
+                          bn: int = 0, packed: bool = True, impl=None):
+    if not packed:
+        w = packing.pack(w, bk, bn).blocks
+    out = ops.tsmm_skinny(x, w, None, act=None, impl=impl)
+    if bias is None and act in (None, "none"):
+        return out
+    return _split_epilogue(out, _pad_bias(bias, out.shape[1]), act)
+
+
+# ---------------------------------------------------------------------------
+# ksplit — parallel partial sums over k + fused reduction/epilogue
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bk", "bn", "splits", "act", "impl"))
+def _ksplit_compute(x, wp, bias, *, bk, bn, splits, act, impl):
+    m = x.shape[0]
+    nk, nn = wp.shape[0], wp.shape[1]
+    if impl == "xla":
+        nki = nk // splits
+        x4 = x.reshape(m, splits, nki, bk)
+        wp5 = wp.reshape(splits, nki, nn, bk, bn)
+        parts = jnp.einsum("msjb,sjnbc->smnc", x4, wp5,
+                           preferred_element_type=jnp.float32)
+        parts = parts.reshape(splits, m, nn * bn)
+    else:
+        parts = _k.tsmm_skinny_a_ksplit(x, wp, bk=bk, bn=bn, splits=splits,
+                                        packed=True,
+                                        interpret=(impl == "pallas_interpret"))
+    # fused reduction + epilogue: partials collapse and bias/act apply on
+    # the fp32 sum inside the same program
+    acc = parts.sum(axis=0)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)[None, :]
+    return _ref.act_ref(acc, act).astype(x.dtype)
+
+
+@register_variant("ksplit", "skinny_a", param_grid={"splits": (2, 4)},
+                  doc="k-split parallel partial sums + fused "
+                      "reduction/epilogue")
+def skinny_ksplit(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
+                  packed: bool = True, impl=None, splits: int = 2):
+    impl = ops._resolve(impl)
+    if not packed:
+        w = packing.pack(w, bk, bn).blocks
+    nk, nn, bk, bn = w.shape
+    m = x.shape[0]
+    mp = _ceil_to(m, ops.sublane(x.dtype))
+    xp = ops.pad2(x, mp, nk * bk)
+    s = split_divisor(nk, splits)
+    out = _ksplit_compute(xp, w, _pad_bias(bias, nn * bn), bk=bk, bn=bn,
+                          splits=s, act=act, impl=impl)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# fused_pack — pack-on-the-fly from the NATURAL weight layout
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "act", "impl"))
+def _fused_pack_compute(x, w, bias, *, bk, bn, act, impl):
+    if impl == "xla":
+        # blocked k contraction over the NATURAL layout — the same
+        # blocked-einsum schedule the packed baseline times, minus its
+        # pack pass, so an off-TPU measurement of fused_pack vs baseline
+        # isolates exactly the per-call pack cost (not dot-vs-einsum
+        # codegen differences)
+        m, k = x.shape
+        nk = k // bk
+        out = jnp.einsum("mjb,jbn->mn", x.reshape(m, nk, bk),
+                         w.reshape(nk, bk, w.shape[1]),
+                         preferred_element_type=jnp.float32)
+        if bias is not None:
+            out = out + bias.astype(jnp.float32)[None, :]
+        return _ref.act_ref(out, act).astype(x.dtype)
+    return _k.tsmm_skinny_a_natural(x, w, bias, bk=bk, bn=bn, act=act,
+                                    interpret=(impl == "pallas_interpret"))
+
+
+@register_variant("fused_pack", "skinny_a", requires_prepack=False,
+                  doc="pack-on-the-fly: strided natural-layout W reads "
+                      "inside the kernel, no per-call pack pass "
+                      "(prepack=False shapes)")
+def skinny_fused_pack(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
+                      packed: bool = False, impl=None):
+    if packed:
+        # weight already block-major (packed at load): nothing to fuse —
+        # honest fallback to the baseline packed kernel
+        return ops.tsmm_skinny(x, w, bias, act=act, impl=impl)
+    impl = ops._resolve(impl)
+    m, k = x.shape
+    n = w.shape[1]
+    kp, np_ = _ceil_to(k, bk), _ceil_to(n, bn)
+    mp = _ceil_to(m, ops.sublane(x.dtype))
+    out = _fused_pack_compute(ops.pad2(x, mp, kp), ops.pad2(w, kp, np_),
+                              _pad_bias(bias, np_), bk=bk, bn=bn, act=act,
+                              impl=impl)
+    return out[:m]

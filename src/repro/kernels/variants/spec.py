@@ -1,0 +1,205 @@
+"""Kernel-variant specs + the variant registry (jax-free).
+
+The paper's install-time stage selects among *competing inner kernels*,
+not just block sizes.  A :class:`KernelSpec` names one member of that
+family (variant name + variant-specific parameters) and rides on
+``core.plan.Plan`` as a first-class tuning axis: it round-trips through
+the plan registry's JSON, extends ``Plan.tuning_key`` (so the measurement
+cache never conflates two schedules), and the autotuner enumerates the
+cross product of variants x block shapes.
+
+This module is import-light on purpose — ``core.plan`` imports it, so it
+must not drag jax in.  The actual Pallas kernel generators live in the
+sibling ``tall``/``skinny`` modules and self-register on import via
+:func:`register_variant`; :func:`_ensure_seeded` imports them lazily the
+first time anyone queries the registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional
+
+BASELINE_NAME = "baseline"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One point in the kernel-variant dimension of the search space.
+
+    ``params`` is a sorted tuple of (key, value) pairs so specs hash and
+    compare structurally (frozen dataclasses with dicts would not)."""
+
+    name: str = BASELINE_NAME
+    params: tuple = ()
+
+    @staticmethod
+    def make(name: str, **params) -> "KernelSpec":
+        return KernelSpec(name, tuple(sorted(params.items())))
+
+    def kwargs(self) -> dict:
+        return dict(self.params)
+
+    @property
+    def is_baseline(self) -> bool:
+        return self.name == BASELINE_NAME and not self.params
+
+    def key(self) -> str:
+        """Stable string identity, e.g. ``ksplit[splits=2]``."""
+        if not self.params:
+            return self.name
+        inner = ",".join(f"{k}={v}" for k, v in self.params)
+        return f"{self.name}[{inner}]"
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "params": dict(self.params)}
+
+    @staticmethod
+    def from_json(d: Optional[Mapping]) -> "KernelSpec":
+        """Decode a spec; ``None``/missing (pre-variant plan records on
+        disk) defaults to the baseline variant — old registries load."""
+        if d is None:
+            return KernelSpec()
+        if isinstance(d, KernelSpec):
+            return d
+        return KernelSpec.make(d["name"], **dict(d.get("params") or {}))
+
+
+BASELINE = KernelSpec()
+
+
+def parse_spec(text: str) -> KernelSpec:
+    """Parse ``name`` / ``name:k=v,k2=v2`` (the ``REPRO_TSMM_VARIANT``
+    syntax).  Validates the name against the registry and raises with the
+    full variant list on a bad one."""
+    text = text.strip()
+    name, _, rest = text.partition(":")
+    name = name.strip()
+    if name not in _registry():
+        raise ValueError(
+            f"unknown kernel variant {name!r}; registered variants: "
+            f"{', '.join(variant_names())}")
+    params = {}
+    for part in rest.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        params[k.strip()] = int(v)
+    return KernelSpec.make(name, **params)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OrientationEntry:
+    """One variant's implementation for one regime (orientation)."""
+
+    fn: Callable                       # the parameterized kernel generator
+    param_grid: tuple = ()             # ((key, (values...)), ...) to enumerate
+    requires_prepack: Optional[bool] = None   # None = either
+    doc: str = ""
+
+
+@dataclasses.dataclass
+class VariantDef:
+    name: str
+    orientations: dict = dataclasses.field(default_factory=dict)
+
+    def entry(self, orientation: str) -> OrientationEntry:
+        try:
+            return self.orientations[orientation]
+        except KeyError:
+            raise ValueError(
+                f"kernel variant {self.name!r} has no {orientation!r} "
+                f"implementation (has: {sorted(self.orientations)})") from None
+
+
+_REGISTRY: dict = {}
+_SEEDED = False
+
+
+def _ensure_seeded() -> None:
+    """Import the built-in variant modules (they self-register).  Lazy so
+    importing ``core.plan`` (which only needs KernelSpec) stays light.
+    The flag flips only AFTER the imports succeed: a failed first seed
+    (broken backend, partial install) re-raises on every call instead of
+    silently leaving the registry empty forever."""
+    global _SEEDED
+    if _SEEDED:
+        return
+    from repro.kernels.variants import skinny, tall  # noqa: F401
+    _SEEDED = True
+
+
+def _registry() -> dict:
+    _ensure_seeded()
+    return _REGISTRY
+
+
+def register_variant(name: str, orientation: str, *,
+                     param_grid: Optional[Mapping] = None,
+                     requires_prepack: Optional[bool] = None,
+                     doc: str = ""):
+    """Decorator registering one kernel generator for (name, orientation).
+
+    The decorated callable is the variant's runner for that regime; a
+    variant spanning both regimes registers twice under the same name
+    (e.g. ``ksplit``).  ``param_grid`` maps param name -> candidate
+    values, enumerated by :func:`specs_for`;  ``requires_prepack`` gates
+    the variant to prepack=True/False plans (None = applicable to both).
+    """
+    grid = tuple(sorted((k, tuple(v)) for k, v in (param_grid or {}).items()))
+
+    def deco(fn):
+        vdef = _REGISTRY.setdefault(name, VariantDef(name))
+        if orientation in vdef.orientations:
+            raise ValueError(f"variant {name!r}/{orientation!r} registered twice")
+        d = doc or (fn.__doc__ or "").strip().split("\n", 1)[0]
+        vdef.orientations[orientation] = OrientationEntry(
+            fn=fn, param_grid=grid, requires_prepack=requires_prepack, doc=d)
+        return fn
+
+    return deco
+
+
+def get_variant(name: str) -> VariantDef:
+    reg = _registry()
+    try:
+        return reg[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel variant {name!r}; registered variants: "
+            f"{', '.join(sorted(reg))}") from None
+
+
+def variant_names() -> list:
+    return sorted(_registry())
+
+
+def _expand_grid(grid: tuple) -> list:
+    """Cross product of a ((key, values), ...) grid -> list of dicts."""
+    combos = [{}]
+    for key, values in grid:
+        combos = [{**c, key: v} for c in combos for v in values]
+    return combos
+
+
+def specs_for(orientation: str, prepack: bool = True) -> list:
+    """Every registered KernelSpec applicable to (orientation, prepack),
+    baseline first — the variant dimension of the autotuner's search
+    space.  Deterministic order (registry is sorted by name)."""
+    out = []
+    for name in sorted(_registry()):
+        entry = _REGISTRY[name].orientations.get(orientation)
+        if entry is None:
+            continue
+        if entry.requires_prepack is not None and entry.requires_prepack != prepack:
+            continue
+        for combo in _expand_grid(entry.param_grid):
+            out.append(KernelSpec.make(name, **combo))
+    out.sort(key=lambda s: (not s.is_baseline, s.key()))
+    return out

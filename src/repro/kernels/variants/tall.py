@@ -1,0 +1,187 @@
+"""Tall-A regime kernel variants (DESIGN.md §10).
+
+Each registered function is one competing inner kernel for the tall-A
+orientation (A (M,K) tall x B (K,N) skinny).  Shared contract:
+
+    fn(a, b, *, bm, bk, packed, impl, **variant_params)
+
+``a`` is the natural (M, K) operand when ``packed`` is False, or the
+block-major (nm, nk, bm, bk) pre-packed layout when True (the caller —
+``core.tsmm.tsmm_dot`` or the evaluator — owns the pack, exactly as for
+the baseline, so pre-pack cost placement is identical across variants).
+Returns (M, N) for natural inputs (padding sliced off) or (nm*bm, N) for
+packed inputs (caller slices rows, as with ``ops.tsmm_packed``).
+
+Wrappers stay un-jitted at the top level on purpose: any per-call
+eager work (none in this regime; per-call weight packs in the skinny
+regime) must stay visible to the evaluator's timed region.  The compute
+itself runs through jit'd helpers / ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import tsmm as _k
+from repro.kernels.ops import _ceil_to
+from repro.kernels.variants.spec import register_variant
+
+
+def split_divisor(nk: int, want: int) -> int:
+    """Largest divisor of ``nk`` that is <= ``want`` (>= 1) — the runtime
+    clamp for k-split plans whose block count the requested split does not
+    divide (env-override plans; enumerated plans are gated by
+    ``vmem_model.feasible``)."""
+    d = max(1, min(int(want), int(nk)))
+    while nk % d:
+        d -= 1
+    return d
+
+
+def _pad_natural(a, b, bm, bk):
+    """Pad a natural-layout (a, b) pair to kernel-legal multiples; returns
+    (a_pad, b_pad, bm_eff) — same policy as ``ops.tsmm``."""
+    m, k = a.shape
+    n = b.shape[1]
+    bm_ = min(bm, _ceil_to(m, ops.sublane(a.dtype)))
+    mp, kp = _ceil_to(m, bm_), _ceil_to(k, bk)
+    npad = _ceil_to(n, 128)
+    return ops.pad2(a, mp, kp), ops.pad2(b, kp, npad), bm_
+
+
+def _pad_b_for_packed(ap, b):
+    nm, nk, bm, bk = ap.shape
+    return ops.pad2(b, nk * bk, _ceil_to(b.shape[1], 128))
+
+
+# ---------------------------------------------------------------------------
+# baseline — the PR-3 kernels, unchanged semantics
+# ---------------------------------------------------------------------------
+
+
+@register_variant("baseline", "tall_a",
+                  doc="k-innermost VMEM-accumulate (the original kernel)")
+def tall_baseline(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
+                  impl=None):
+    if packed:
+        return ops.tsmm_packed(a, b, impl=impl)
+    return ops.tsmm(a, b, bm=bm, bk=bk, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# ksplit — parallel partial sums over the contraction axis
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "splits", "packed", "impl"))
+def _ksplit_compute(a, b, *, bm, bk, splits, packed, impl):
+    if impl == "xla":
+        if packed:
+            nm, nk, pbm, pbk = a.shape
+            nki = nk // splits
+            ap5 = a.reshape(nm, splits, nki, pbm, pbk)
+            bb = b.reshape(splits, nki, pbk, b.shape[1])
+            parts = jnp.einsum("msjab,sjbn->sman", ap5, bb,
+                               preferred_element_type=jnp.float32)
+            parts = parts.reshape(splits, nm * pbm, b.shape[1])
+        else:
+            m = a.shape[0]
+            kk = a.shape[1] // splits
+            parts = jnp.einsum("msk,skn->smn",
+                               a.reshape(m, splits, kk),
+                               b.reshape(splits, kk, b.shape[1]),
+                               preferred_element_type=jnp.float32)
+    else:
+        parts = _k.tsmm_tall_a_ksplit(a, b, bm=bm, bk=bk, splits=splits,
+                                      packed=packed,
+                                      interpret=(impl == "pallas_interpret"))
+    # fused reduction: the partial sums collapse inside the same program
+    return parts.sum(axis=0).astype(b.dtype)
+
+
+@register_variant("ksplit", "tall_a", param_grid={"splits": (2, 4)},
+                  doc="k-split parallel partial sums + fused reduction")
+def tall_ksplit(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
+                impl=None, splits: int = 2):
+    impl = ops._resolve(impl)
+    n = b.shape[1]
+    if packed:
+        nm, nk, bm, bk = a.shape
+        bp = _pad_b_for_packed(a, b)
+        s = split_divisor(nk, splits)
+        return _ksplit_compute(a, bp, bm=bm, bk=bk, splits=s, packed=True,
+                               impl=impl)[:, :n]
+    m = a.shape[0]
+    ap, bp, bm_ = _pad_natural(a, b, bm, bk)
+    s = split_divisor(ap.shape[1] // bk, splits)
+    return _ksplit_compute(ap, bp, bm=bm_, bk=bk, splits=s, packed=False,
+                           impl=impl)[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# kmajor — k-outermost loop order, fp32 output revisiting
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "packed", "impl"))
+def _kmajor_compute(a, b, *, bm, bk, packed, impl):
+    if impl == "xla":
+        # same math; the schedule difference is a Pallas/TPU property
+        if packed:
+            return ops._xla_packed_a(a, b)
+        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(b.dtype)
+    out = _k.tsmm_tall_a_kmajor(a, b, bm=bm, bk=bk, packed=packed,
+                                interpret=(impl == "pallas_interpret"))
+    return out.astype(b.dtype)
+
+
+@register_variant("kmajor", "tall_a",
+                  doc="k-outermost loop order (B fetched once per k step, "
+                      "fp32 output revisited in HBM)")
+def tall_kmajor(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
+                impl=None):
+    impl = ops._resolve(impl)
+    n = b.shape[1]
+    if packed:
+        return _kmajor_compute(a, _pad_b_for_packed(a, b), bm=0, bk=0,
+                               packed=True, impl=impl)[:, :n]
+    m = a.shape[0]
+    ap, bp, bm_ = _pad_natural(a, b, bm, bk)
+    return _kmajor_compute(ap, bp, bm=bm_, bk=bk, packed=False,
+                           impl=impl)[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# b_resident — whole skinny operand VMEM-resident
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "packed", "impl"))
+def _bres_compute(a, b, *, bm, bk, packed, impl):
+    if impl == "xla":
+        if packed:
+            return ops._xla_packed_a(a, b)
+        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(b.dtype)
+    return _k.tsmm_tall_a_bres(a, b, bm=bm, bk=bk, packed=packed,
+                               interpret=(impl == "pallas_interpret"))
+
+
+@register_variant("b_resident", "tall_a",
+                  doc="whole B (K, N) held in VMEM; k panels dynamic-sliced "
+                      "(no per-row-panel B reload traffic)")
+def tall_b_resident(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
+                    impl=None):
+    impl = ops._resolve(impl)
+    n = b.shape[1]
+    if packed:
+        return _bres_compute(a, _pad_b_for_packed(a, b), bm=0, bk=0,
+                             packed=True, impl=impl)[:, :n]
+    m = a.shape[0]
+    ap, bp, bm_ = _pad_natural(a, b, bm, bk)
+    return _bres_compute(ap, bp, bm=bm_, bk=bk, packed=False,
+                         impl=impl)[:m, :n]

@@ -113,9 +113,17 @@ def main():
           f"packed_leaves={len(eng.pack_report)}")
 
     def epilogue():
+        from collections import Counter
+
         from repro.core import registry
         s = registry.stats()
         print(f"plan registry: {s['hits']} hits / {s['misses']} misses")
+        vr = eng.variant_report()
+        if vr:
+            counts = Counter(vr.values())
+            print("kernel variants in play: "
+                  + ", ".join(f"{k} x{v}"
+                              for k, v in sorted(counts.items())))
         if eng.tuner is not None:
             eng.tuner.join(timeout=300)
             print(f"background tuner committed {len(eng.tuner.committed)} "

@@ -276,6 +276,26 @@ class Engine:
                              if model.prefill_row is not None else None)
         self._drain_misses()
 
+    def variant_report(self) -> dict:
+        """Which kernel variant each packed weight will replay per batch
+        bucket — read off the ``kernel_specs`` stamp ``prepack_for`` left
+        on every PackedTensor (DESIGN.md §10), so the report is exact for
+        sharded engines too (whose registry keys use per-shard dims).
+        Keys are ``m{bucket}_k{k}_n{n}`` strings, values
+        ``KernelSpec.key()``; unstamped/uncovered buckets are absent
+        (they serve the baseline)."""
+        from repro.core.packing import PackedTensor
+        out = {}
+        leaves = jax.tree.leaves(
+            self.params, is_leaf=lambda x: isinstance(x, PackedTensor))
+        for leaf in leaves:
+            if not isinstance(leaf, PackedTensor):
+                continue
+            k, n = leaf.shape[-2:]
+            for bucket, spec in leaf.kernel_specs:
+                out[f"m{bucket}_k{k}_n{n}"] = spec.key()
+        return out
+
     # -- background tuning (runtime miss path, DESIGN.md §9) ------------
 
     def _drain_misses(self) -> None:
