@@ -2,26 +2,31 @@
 
 from __future__ import annotations
 
-import time
 from pathlib import Path
 
-import jax
 import numpy as np
 
 ART = Path(__file__).resolve().parent / "artifacts"
 ART.mkdir(parents=True, exist_ok=True)
 
 
+def time_stats(fn, *, warmup=2, iters=10) -> dict:
+    """{'best': min-of-iters seconds, 'median': median seconds}.
+
+    Shares ``core.evaluator.time_samples`` — the SAME timing loop and
+    estimator the install-time measurement path uses (min-of-iters:
+    scheduling noise on a shared machine is strictly additive, so the min
+    estimates the kernel's own cost; see ``evaluator.measure_plan``) —
+    so benchmark tables and install-time measurements agree on noisy
+    machines.  The median is reported alongside as the noise signal."""
+    from repro.core.evaluator import time_samples
+    ts = time_samples(fn, warmup=warmup, iters=iters)
+    return {"best": float(np.min(ts)), "median": float(np.median(ts))}
+
+
 def timeit(fn, *, warmup=2, iters=10):
-    """Median seconds per call."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    """Min-of-iters seconds per call (the evaluator's estimator)."""
+    return time_stats(fn, warmup=warmup, iters=iters)["best"]
 
 
 def emit(rows, header=("name", "us_per_call", "derived")):

@@ -1,55 +1,103 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--json [PATH]]
 
-Prints ``name,us_per_call,derived`` CSV rows per section.  The roofline
+Prints ``name,us_per_call,derived`` CSV rows per section.  With
+``--json`` the same rows are written machine-readable (default
+``benchmarks/artifacts/BENCH_5.json``) so the perf trajectory is tracked
+across PRs — CI uploads the file as a build artifact.  The roofline
 section summarizes dry-run artifacts when present (run
 ``python -m repro.launch.dryrun --all`` first for the full table).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
+from pathlib import Path
+
+DEFAULT_JSON = Path(__file__).resolve().parent / "artifacts" / "BENCH_5.json"
 
 
-def main() -> None:
-    from benchmarks import (cache_complexity, inner_kernel_select,
-                            packing_fraction, prepack_vs_conventional)
+def _roofline_rows():
+    """Roofline dry-run summary as (name, us_per_call, derived) triples —
+    the same schema every other section emits."""
+    from benchmarks import roofline
+    rows = []
+    for r in roofline.run():
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}{r['tag']}",
+            round(bound * 1e6, 1),
+            f"dominant={r['dominant']}|mfu_bound={r['mfu_bound']:.3f}"
+            f"|useful={r['useful_ratio']:.2f}"))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const=str(DEFAULT_JSON), default="",
+                    help="write per-section rows as JSON (default path: "
+                         "benchmarks/artifacts/BENCH_5.json)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (cache_complexity, epilogue_fusion,
+                            inner_kernel_select, packing_fraction,
+                            prepack_vs_conventional)
     sections = [
         ("fig5_packing_fraction", packing_fraction.run),
         ("fig6_7_prepack_vs_conventional", prepack_vs_conventional.run),
         ("fig8_inner_kernel_selection", inner_kernel_select.run),
         ("eq4_6_cache_complexity", cache_complexity.run),
+        ("sec11_epilogue_fusion", epilogue_fusion.run),
     ]
     failed = 0
+    report = []
     for name, fn in sections:
         print(f"\n# === {name} ===")
         try:
-            fn()
+            rows = fn() or []
         except Exception:  # noqa: BLE001
             failed += 1
+            rows = []
             traceback.print_exc()
+        report.append((name, rows))
 
     print("\n# === roofline (from dry-run artifacts) ===")
     try:
-        from benchmarks import roofline
-        rows = roofline.run()
+        rows = _roofline_rows()
         if rows:
             print("name,us_per_call,derived")
             for r in rows:
-                bound = max(r["t_compute_s"], r["t_memory_s"],
-                            r["t_collective_s"])
-                print(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}{r['tag']},"
-                      f"{bound * 1e6:.1f},"
-                      f"dominant={r['dominant']}|mfu_bound={r['mfu_bound']:.3f}"
-                      f"|useful={r['useful_ratio']:.2f}")
+                print(",".join(str(x) for x in r))
         else:
             print("# no dry-run artifacts yet "
                   "(python -m repro.launch.dryrun --all)")
+        report.append(("roofline", rows))
     except Exception:  # noqa: BLE001
         failed += 1
+        report.append(("roofline", []))
         traceback.print_exc()
+
+    if args.json:
+        blob = {
+            "bench": "BENCH_5",
+            "failed_sections": failed,
+            "sections": [
+                {"section": name,
+                 "rows": [{"name": r[0], "us_per_call": r[1],
+                           "derived": str(r[2]) if len(r) > 2 else ""}
+                          for r in rows]}
+                for name, rows in report
+            ],
+        }
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(blob, indent=1))
+        print(f"\nwrote {sum(len(s['rows']) for s in blob['sections'])} rows "
+              f"-> {out}")
     if failed:
         sys.exit(1)
 

@@ -28,7 +28,7 @@ from typing import Optional
 from repro.core import registry
 from repro.core.hw import TPU_V5E, HwSpec
 from repro.core.plan import (SKINNY_MAX, BucketGrid, Plan, PlanGrid, PlanSet,
-                             Problem, is_tsmm)
+                             Problem, is_tsmm, schedules_for)
 from repro.core.vmem_model import feasible, predict
 
 log = logging.getLogger(__name__)
@@ -67,10 +67,11 @@ def candidate_blocks(problem: Problem,
     """Enumerate feasible candidate plans for one problem.
 
     The search space is the cross product of block shapes x registered
-    kernel variants (kernels/variants, DESIGN.md §10) — the paper's
-    install-time selection among competing inner kernels, not just among
-    blockings of one kernel.  Candidates are model-ranked; the measured
-    short-list then times whichever variants survive the prune."""
+    kernel variants (kernels/variants, DESIGN.md §10) x grid schedules
+    (DESIGN.md §11) — the paper's install-time selection among competing
+    inner kernels AND among partitionings/pipelinings of each kernel.
+    Candidates are model-ranked; the measured short-list then times
+    whichever variants/schedules survive the prune."""
     from repro.kernels.variants import specs_for  # lazy: seeds the registry
     hw = hw or default_hw()
     orientation = "tall_a" if problem.skinny_dim == "n" else "skinny_a"
@@ -116,7 +117,17 @@ def candidate_blocks(problem: Problem,
             for spec in specs_for("skinny_a", prepack=False):
                 expanded.append(dataclasses.replace(cf, kernel=spec))
 
-    out = [predict(c, hw) for c in expanded if feasible(c, hw)]
+    # grid-schedule axis (DESIGN.md §11): every (block, variant) candidate
+    # x every schedule its kernel supports — default-schedule first per
+    # candidate, so ties under the stable sort keep pre-schedule behavior
+    scheduled = []
+    for c in expanded:
+        for sched in schedules_for(c.orientation, c.kernel.name):
+            scheduled.append(
+                c if sched.is_default
+                else dataclasses.replace(c, schedule=sched))
+
+    out = [predict(c, hw) for c in scheduled if feasible(c, hw)]
     out.sort(key=lambda p: p.score)
     return out
 

@@ -73,32 +73,35 @@ def build_callable(plan: Plan, impl: Optional[str] = None) -> Callable:
     input; the model amortizes it (Eq.7) and we keep it outside the
     region for both variants so tall-A candidates stay comparable.
 
-    Kernel-variant fidelity (DESIGN.md §10): the callable dispatches
-    through ``kernels.variants.run_*`` with the plan's ``kernel`` spec —
-    the SAME registry entry point ``tsmm_dot`` replays at serving time —
-    so the stopwatch times exactly the variant the plan records."""
+    Kernel-variant + schedule fidelity (DESIGN.md §10/§11): the callable
+    dispatches through ``kernels.variants.run_*`` with the plan's
+    ``kernel`` spec AND its ``schedule`` — the SAME registry entry point
+    ``tsmm_dot`` replays at serving time — so the stopwatch times exactly
+    the fused variant/grid-schedule the plan records."""
     p = plan.problem
     a, b = _materialize(plan)
     impl = resolve_impl(impl)
     spec = plan.kernel
+    sched = plan.schedule
     if plan.orientation == "tall_a":
         if plan.prepack:
             ap = jax.block_until_ready(ops.pack_blocks(a, plan.bm, plan.bk))
             return lambda: variants.run_tall_a(spec, ap, b, bm=plan.bm,
                                                bk=plan.bk, packed=True,
-                                               impl=impl)
+                                               impl=impl, schedule=sched)
         return lambda: variants.run_tall_a(spec, a, b, bm=plan.bm,
                                            bk=plan.bk, packed=False,
-                                           impl=impl)
+                                           impl=impl, schedule=sched)
     if plan.prepack:
         wp = jax.block_until_ready(ops.pack_blocks(b, plan.bk, plan.bn))
         return lambda: variants.run_skinny_a(spec, a, wp, bk=plan.bk,
                                              bn=plan.bn, packed=True,
-                                             impl=impl)
+                                             impl=impl, schedule=sched)
     # tsmm_dot re-packs an unpacked skinny weight every call: the variant
     # owns that per-call cost (fused_pack skips it) — time it.
     return lambda: variants.run_skinny_a(spec, a, b, bk=plan.bk, bn=plan.bn,
-                                         packed=False, impl=impl)
+                                         packed=False, impl=impl,
+                                         schedule=sched)
 
 
 def parity_check(plan: Plan, impl: Optional[str] = None,
@@ -132,7 +135,11 @@ def parity_check(plan: Plan, impl: Optional[str] = None,
             f"diverges from tsmm_dot replay (max abs err {err:.3e})")
 
 
-def _time_samples(fn: Callable, *, warmup: int = 2, iters: int = 5) -> list:
+def time_samples(fn: Callable, *, warmup: int = 2, iters: int = 5) -> list:
+    """Raw per-call wall-clock samples after warmup — THE shared timing
+    loop: the measurement path below and ``benchmarks/common.timeit`` both
+    use it, so benchmark tables and install-time measurements are computed
+    from the same estimator (min-of-iters; see :func:`measure_plan`)."""
     for _ in range(warmup):
         jax.block_until_ready(fn())
     ts = []
@@ -141,6 +148,9 @@ def _time_samples(fn: Callable, *, warmup: int = 2, iters: int = 5) -> list:
         jax.block_until_ready(fn())
         ts.append(time.perf_counter() - t0)
     return ts
+
+
+_time_samples = time_samples  # original private name (internal callers)
 
 
 def time_callable(fn: Callable, *, warmup: int = 2, iters: int = 5) -> float:
@@ -168,7 +178,8 @@ def measure_plan(plan: Plan, impl: Optional[str] = None, *,
     q25, q75 = np.percentile(ts, (25, 75))
     rec = MeasureRecord(plan=plan, seconds=best, iters=iters,
                         dispersion=float((q75 - q25) / max(best, 1e-12)),
-                        impl=resolve_impl(impl), source=source)
+                        impl=resolve_impl(impl), source=source,
+                        wall_time=time.time())
     (reg or registry.default()).record_measurement(rec)
     return rec
 
@@ -232,7 +243,8 @@ def measure_plans_interleaved(plans: list, impl: Optional[str] = None, *,
         q25, q75 = np.percentile(ts, (25, 75))
         rec = MeasureRecord(plan=plan, seconds=best, iters=len(ts),
                             dispersion=float((q75 - q25) / max(best, 1e-12)),
-                            impl=resolve_impl(impl), source=source)
+                            impl=resolve_impl(impl), source=source,
+                            wall_time=time.time())
         reg.record_measurement(rec)
         out.append(rec)
     return out

@@ -254,6 +254,22 @@ def main(argv=None):
             sys.exit(1)
         print(f"variant check ok: {len(rows)} registered variant entries "
               f"verified in interpret mode")
+        # grid-schedule self-check (DESIGN.md §11): every enumerable
+        # schedule x every variant it applies to, in interpret mode —
+        # the same gate the variant axis gets, so a broken M-partition
+        # grid or semantics override can never reach a tuned registry.
+        from repro.kernels.variants import verify_schedules
+        rows = verify_schedules(impl="pallas_interpret")
+        bad = [r for r in rows if not r["ok"]]
+        for r in bad:
+            print(f"schedule {r['schedule']:24s} {r['spec']:20s} "
+                  f"{r['orientation']:9s} FAILED ({r['error']})")
+        if bad:
+            print(f"CHECK FAILED: {len(bad)}/{len(rows)} grid schedules "
+                  f"broken")
+            sys.exit(1)
+        print(f"schedule check ok: {len(rows)} (variant x schedule) "
+              f"combinations verified in interpret mode")
         return
 
     if args.calibrate:

@@ -20,6 +20,155 @@ from typing import Mapping, Optional
 from repro.kernels.variants.spec import KernelSpec
 
 
+# ---------------------------------------------------------------------------
+# Grid schedules (DESIGN.md §11): how a plan's block grid is mapped onto
+# the hardware — the paper's runtime thread-level partitioning of the tall
+# dimension, plus the Pallas pipeline knobs that decide operand streaming.
+# ---------------------------------------------------------------------------
+
+
+SEMANTICS = ("parallel", "arbitrary")
+
+# Kernels whose tall-dim grid axis can be partitioned into per-core chunks
+# (an extra leading *parallel* grid axis).  ksplit already spends its
+# parallel axis on the contraction split; kmajor's k loop lives at the XLA
+# level (single-axis grid, output aliasing) so neither re-partitions.
+M_SPLIT_KERNELS = frozenset({"baseline", "b_resident"})
+# Kernels with no streamed-operand pipeline to re-schedule: the k loop is
+# a fori_loop of single-slice Pallas passes, so multibuffer depth and
+# dimension-semantics overrides do not apply.
+FIXED_SCHEDULE_KERNELS = frozenset({"kmajor"})
+
+# Whether the installed Pallas can express a per-operand buffering depth
+# (pl.Buffered block specs / emit_pipeline buffer counts).  This jax
+# version cannot: a multibuffer!=2 plan would execute byte-for-byte the
+# same program, and the model's latency credit would make the autotuner
+# systematically pick a no-op non-default schedule — so the autotuner
+# only ENUMERATES multibuffer when it is expressible.  The knob stays
+# fully modeled (VMEM footprint, feasibility, overhead credit,
+# tuning-key suffix) and reachable via REPRO_TSMM_SCHEDULE, so flipping
+# this flag is the only change needed once the API lands.
+MULTIBUFFER_EXPRESSIBLE = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """One point in the grid-schedule dimension of the search space.
+
+    A KernelSpec names WHICH inner kernel runs; a ScheduleSpec decides HOW
+    its grid is laid onto the machine:
+
+    * ``dims`` — per-grid-axis dimension semantics override
+      (``parallel``/``arbitrary``); empty means the kernel's default.
+      Length must match the variant's grid rank (``vmem_model.grid_rank``).
+    * ``m_split`` — M-partition factor: the tall dimension's row-panel
+      axis is split into ``m_split`` per-core chunks, each a *parallel*
+      leading grid axis (the paper's runtime thread-level partitioning,
+      TSM2X's tunable thread mapping).  Only meaningful for
+      ``M_SPLIT_KERNELS`` and when it divides the row-panel count.
+    * ``multibuffer`` — buffering depth of the k-loop operand streams
+      (2 = the classic double buffering the pre-schedule model assumed;
+      deeper hides more DMA-issue latency at ``multibuffer``x the
+      streamed-operand VMEM footprint).
+
+    The default ScheduleSpec IS the pre-schedule behavior, so plans and
+    measurement records written before the schedule axis existed decode
+    to it and keep matching their tuning keys."""
+
+    dims: tuple = ()
+    m_split: int = 1
+    multibuffer: int = 2
+
+    @property
+    def is_default(self) -> bool:
+        return self == ScheduleSpec()
+
+    def key(self) -> str:
+        """Stable string identity, e.g. ``ms2,mb3`` or
+        ``ms2,dims=parallel.arbitrary.arbitrary``; ``default`` when
+        nothing deviates."""
+        parts = []
+        if self.m_split != 1:
+            parts.append(f"ms{self.m_split}")
+        if self.multibuffer != 2:
+            parts.append(f"mb{self.multibuffer}")
+        if self.dims:
+            parts.append("dims=" + ".".join(self.dims))
+        return ",".join(parts) if parts else "default"
+
+    def to_json(self) -> dict:
+        return {"dims": list(self.dims), "m_split": self.m_split,
+                "multibuffer": self.multibuffer}
+
+    @staticmethod
+    def from_json(d) -> "ScheduleSpec":
+        """Decode a schedule; ``None``/missing (pre-schedule plan records
+        on disk) defaults to the pre-schedule behavior — old registries
+        load."""
+        if d is None:
+            return ScheduleSpec()
+        if isinstance(d, ScheduleSpec):
+            return d
+        return ScheduleSpec(dims=tuple(d.get("dims") or ()),
+                            m_split=int(d.get("m_split", 1)),
+                            multibuffer=int(d.get("multibuffer", 2)))
+
+
+DEFAULT_SCHEDULE = ScheduleSpec()
+
+
+def parse_schedule(text: str) -> ScheduleSpec:
+    """Parse the ``REPRO_TSMM_SCHEDULE`` override syntax:
+    ``m_split=2,multibuffer=3,dims=parallel;arbitrary``.  Unknown keys or
+    bad semantics names fail loudly instead of silently serving the
+    default schedule."""
+    fields = {"dims": (), "m_split": 1, "multibuffer": 2}
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        k = k.strip()
+        if k not in fields:
+            raise ValueError(
+                f"unknown schedule field {k!r}; valid fields: "
+                f"{', '.join(sorted(fields))}")
+        if k == "dims":
+            dims = tuple(s.strip() for s in v.split(";") if s.strip())
+            bad = [s for s in dims if s not in SEMANTICS]
+            if bad:
+                raise ValueError(
+                    f"bad dimension semantics {bad}; valid: {SEMANTICS}")
+            fields[k] = dims
+        else:
+            fields[k] = int(v)
+    return ScheduleSpec(**fields)
+
+
+def schedules_for(orientation: str, kernel_name: str = "baseline") -> list:
+    """Every ScheduleSpec the autotuner enumerates for one
+    (orientation, kernel variant) — the schedule dimension of the search
+    space, default first (ties under the stable score sort keep the
+    pre-schedule behavior).  Only knobs that change the EXECUTED program
+    are enumerated: ``m_split`` always (it changes the grid),
+    ``multibuffer`` only when the Pallas API can express it
+    (``MULTIBUFFER_EXPRESSIBLE``); ``dims`` overrides never (a
+    debugging knob via ``REPRO_TSMM_SCHEDULE``).  Infeasible combos are
+    pruned by ``vmem_model.feasible``, not here."""
+    out = [DEFAULT_SCHEDULE]
+    if kernel_name in FIXED_SCHEDULE_KERNELS:
+        return out
+    splits = ((1, 2, 4) if orientation == "tall_a"
+              and kernel_name in M_SPLIT_KERNELS else (1,))
+    depths = (2, 3) if MULTIBUFFER_EXPRESSIBLE else (2,)
+    for ms in splits:
+        for mb in depths:
+            s = ScheduleSpec(m_split=ms, multibuffer=mb)
+            if not s.is_default:
+                out.append(s)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class Problem:
     """One TSMM instance: C(m,n) = A(m,k) @ B(k,n)."""
@@ -83,6 +232,10 @@ class Plan:
     # variant dimension of the search space (kernels/variants, DESIGN.md
     # §10); defaults to the baseline so pre-variant records stay valid
     kernel: KernelSpec = KernelSpec()
+    # how the kernel's grid maps onto the machine — the schedule dimension
+    # (DESIGN.md §11); defaults to the pre-schedule behavior so records
+    # written before the axis existed stay valid
+    schedule: ScheduleSpec = DEFAULT_SCHEDULE
     # predicted roofline terms (seconds) from the cost model
     t_compute: float = 0.0
     t_memory: float = 0.0
@@ -105,30 +258,39 @@ class Plan:
         The kernel variant extends the key, so a measured baseline plan
         and a model-ranked variant plan can never collide in the
         measurement cache; a baseline spec adds no suffix, so records
-        cached before the variant axis existed keep matching."""
+        cached before the variant axis existed keep matching.  The grid
+        schedule extends it the same way (DESIGN.md §11): only a
+        non-default ScheduleSpec appends, so pre-schedule measurement
+        records keep matching their default-schedule plans."""
         base = (f"{self.orientation}_bm{self.bm}_bk{self.bk}_bn{self.bn}"
                 f"_pp{int(self.prepack)}_{self.impl}")
         if not self.kernel.is_baseline:
             base += f"_kv:{self.kernel.key()}"
+        if not self.schedule.is_default:
+            base += f"_sch:{self.schedule.key()}"
         return base
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["kernel"] = self.kernel.to_json()
+        d["schedule"] = self.schedule.to_json()
         return d
 
     @staticmethod
     def from_json(d: dict) -> "Plan":
         d = dict(d)
         d["problem"] = Problem(**d["problem"])
-        # pre-variant records carry no "kernel" key: default to baseline
+        # pre-variant records carry no "kernel" key: default to baseline;
+        # pre-schedule records carry no "schedule": default behavior
         d["kernel"] = KernelSpec.from_json(d.get("kernel"))
+        d["schedule"] = ScheduleSpec.from_json(d.get("schedule"))
         return Plan(**d)
 
     def __str__(self) -> str:
         p = self.problem
         return (f"Plan[{p.key()} {self.orientation} blocks=({self.bm},{self.bk},"
                 f"{self.bn}) grid={self.grid} kernel={self.kernel.key()} "
+                f"schedule={self.schedule.key()} "
                 f"impl={self.impl} prepack={self.prepack} "
                 f"t_c={self.t_compute:.2e}s "
                 f"t_m={self.t_memory:.2e}s by={self.chosen_by}]")

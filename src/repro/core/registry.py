@@ -38,6 +38,7 @@ import logging
 import os
 import tempfile
 import threading
+import time
 from pathlib import Path
 from typing import Optional
 
@@ -66,6 +67,22 @@ def _platform() -> str:
     return jax.default_backend()
 
 
+# Ceiling on persisted measurement records.  Every --measure sweep, engine
+# background tune and benchmark appends records, and tuning keys fall out
+# of production whenever the candidate space changes (a variant/schedule
+# axis is added, a block ladder moves) — without a cap the cache file
+# grows without bound across runs.  Eviction only ever removes records
+# whose tuning key ``candidate_blocks`` no longer produces, oldest first
+# (``MeasureRecord.wall_time``); records the search can still propose are
+# never dropped, even over the cap.
+MEASURE_CACHE_MAX_DEFAULT = 4096
+
+
+def measure_cache_max() -> int:
+    raw = os.environ.get("REPRO_MEASURE_CACHE_MAX", "")
+    return int(raw) if raw else MEASURE_CACHE_MAX_DEFAULT
+
+
 def _key(problem_key: str) -> str:
     return f"{_platform()}/{problem_key}"
 
@@ -79,7 +96,9 @@ class MeasureRecord:
     ``dispersion`` is the interquartile range over that minimum (a
     unit-free stability signal — re-measure when it is large).
     ``source`` records provenance (install sweep, background tuner,
-    benchmark, ...)."""
+    benchmark, ...); ``wall_time`` (epoch seconds, 0.0 for records
+    persisted before the field existed) orders eviction when the cache
+    hits its cap."""
 
     plan: Plan
     seconds: float
@@ -87,6 +106,7 @@ class MeasureRecord:
     dispersion: float
     impl: str = "xla"
     source: str = "evaluator"
+    wall_time: float = 0.0
 
     def key(self) -> str:
         return f"{self.plan.problem.key()}/{self.plan.tuning_key()}"
@@ -94,7 +114,8 @@ class MeasureRecord:
     def to_json(self) -> dict:
         return {"plan": self.plan.to_json(), "seconds": self.seconds,
                 "iters": self.iters, "dispersion": self.dispersion,
-                "impl": self.impl, "source": self.source}
+                "impl": self.impl, "source": self.source,
+                "wall_time": self.wall_time}
 
     @staticmethod
     def from_json(d: dict) -> "MeasureRecord":
@@ -168,6 +189,11 @@ class Registry:
         # serving engine's background tuner (DESIGN.md §9)
         self._missed: list[str] = []
         self._missed_set: set = set()
+        # problem key -> frozenset of candidate tuning keys (or None on
+        # enumeration failure), memoized across prune passes: candidate
+        # enumeration is pure in the problem, so one walk per problem per
+        # process amortizes the over-cap flush cost
+        self._valid_tuning_keys: dict = {}
 
     # -- paths ----------------------------------------------------------
 
@@ -284,11 +310,61 @@ class Registry:
 
     def _write_measure_file(self) -> None:
         """(lock held) merge-then-write, mirroring the plan map: records
-        flushed by other processes survive; per key ours wins."""
+        flushed by other processes survive; per key ours wins.  Over the
+        cap, stale records (tuning keys the candidate space no longer
+        produces) are evicted oldest-first before the write."""
         _fold_missing(self.measure_path(), self._meas,
                       MeasureRecord.from_json)
+        self._prune_measurements_locked(measure_cache_max())
         _atomic_write_json(self.measure_path(),
                            {k: r.to_json() for k, r in self._meas.items()})
+
+    def _prune_measurements_locked(self, cap: int) -> int:
+        """(lock held) Evict oldest STALE records until the map fits
+        ``cap``.  A record is stale when ``candidate_blocks`` for its
+        problem no longer produces its tuning key — e.g. a variant or
+        schedule that left the registry, or a block size outside the
+        current ladders.  Live records are never evicted (the calibration
+        fit and short-list reuse keep profiting from them), so the map
+        may legitimately exceed the cap when everything is current.
+        Returns the number of evicted records."""
+        if cap <= 0 or len(self._meas) <= cap:
+            return 0
+        from repro.core.autotuner import candidate_blocks  # lazy: no cycle
+        valid = self._valid_tuning_keys
+
+        def stale(rec: MeasureRecord) -> bool:
+            pk = rec.plan.problem.key()
+            if pk not in valid:
+                try:
+                    valid[pk] = frozenset(
+                        p.tuning_key()
+                        for p in candidate_blocks(rec.plan.problem))
+                except Exception:       # enumeration failure: keep records
+                    valid[pk] = None
+            keys = valid[pk]
+            return keys is not None and rec.plan.tuning_key() not in keys
+
+        victims = sorted((k for k, r in self._meas.items() if stale(r)),
+                         key=lambda k: self._meas[k].wall_time)
+        dropped = 0
+        for k in victims:
+            if len(self._meas) <= cap:
+                break
+            del self._meas[k]
+            dropped += 1
+        if dropped:
+            log.info("measurement cache: evicted %d stale records "
+                     "(cap %d)", dropped, cap)
+        return dropped
+
+    def prune_measurements(self, cap: Optional[int] = None) -> int:
+        """Public pruning hook (see ``_prune_measurements_locked``)."""
+        with self._lock:
+            if self._meas_loaded_from is None:
+                self._load_measure_file()
+            return self._prune_measurements_locked(
+                measure_cache_max() if cap is None else cap)
 
     def record_measurement(self, rec: MeasureRecord,
                            persist: bool = False) -> None:
@@ -346,6 +422,7 @@ class Registry:
             self._stats["hits"] = self._stats["misses"] = 0
             self._missed = []
             self._missed_set = set()
+            self._valid_tuning_keys = {}
 
 
 # ---------------------------------------------------------------------------

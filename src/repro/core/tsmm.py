@@ -33,7 +33,8 @@ from repro.core.autotuner import (default_hw, make_plan, make_plan_set,
                                   plan_for_matmul)
 from repro.core.hw import TPU_V5E, HwSpec
 from repro.core.packing import PackedTensor, is_packed, pack
-from repro.core.plan import Plan, Problem, is_tsmm
+from repro.core.plan import (Plan, Problem, ScheduleSpec, is_tsmm,
+                             parse_schedule)
 from repro.core.vmem_model import feasible, predict
 from repro.kernels import ops, variants
 from repro.kernels.variants import KernelSpec
@@ -62,6 +63,23 @@ def variant_choice() -> Optional[KernelSpec]:
     return variants.parse_spec(raw)
 
 
+def schedule_choice() -> Optional[ScheduleSpec]:
+    """``REPRO_TSMM_SCHEDULE`` override — force a grid schedule on every
+    planned TSMM for debugging/bisection (DESIGN.md §11).
+
+    Syntax: ``m_split=2,multibuffer=3,dims=parallel;arbitrary`` (any
+    subset of fields).  Unknown fields or bad semantics names raise, so a
+    typo fails loudly instead of silently serving the default schedule.
+    Kernels clamp knobs they cannot express at the current shape (an
+    M-partition that does not divide the row-panel count degrades to the
+    nearest divisor; a dims override of the wrong rank falls back to the
+    kernel's default semantics)."""
+    raw = os.environ.get("REPRO_TSMM_SCHEDULE", "")
+    if not raw:
+        return None
+    return parse_schedule(raw)
+
+
 def _override_spec(spec: KernelSpec, override: Optional[KernelSpec],
                    orientation: str) -> KernelSpec:
     if override is not None and variants.applies_to(override, orientation):
@@ -69,14 +87,17 @@ def _override_spec(spec: KernelSpec, override: Optional[KernelSpec],
     return spec
 
 
-def _stamped_spec(b: PackedTensor, m: int) -> Optional[KernelSpec]:
-    """The kernel spec ``prepack_for`` stamped on the packed weight for
-    the smallest batch bucket covering ``m`` (None when unstamped or
-    past the largest bucket — callers fall through to the registry)."""
-    for bucket, spec in getattr(b, "kernel_specs", ()):
-        if bucket >= m:
-            return spec
-    return None
+def _stamped_spec(b: PackedTensor, m: int) -> tuple:
+    """The (kernel spec, schedule) ``prepack_for`` stamped on the packed
+    weight for the smallest batch bucket covering ``m`` ((None, None)
+    when unstamped or past the largest bucket — callers fall through to
+    the registry).  Entries stamped before the schedule axis existed are
+    (bucket, spec) pairs and decode to the default schedule."""
+    for entry in getattr(b, "kernel_specs", ()):
+        if entry[0] >= m:
+            sched = entry[2] if len(entry) > 2 else ScheduleSpec()
+            return entry[1], sched
+    return None, None
 
 
 def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
@@ -89,6 +110,7 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
     """
     impl = impl or impl_choice()
     override = variant_choice()
+    sched_override = schedule_choice()
     lead, k = a.shape[:-1], a.shape[-1]
     m = 1
     for d in lead:
@@ -105,12 +127,14 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
             a2 = shard_act(a2.reshape(m, nk, bk), "batch", "kblocks", None
                            ).reshape(m, k)
         spec = plan.kernel if plan is not None else None
+        sched = plan.schedule if plan is not None else None
         if spec is None:
             # serving replay of the registry's recorded winner: the
-            # variant chosen when the weight was packed is stamped on the
-            # PackedTensor (num_shards/dtype-proof — prepack_for keyed
-            # the tuned problems correctly, whatever the sharding)...
-            spec = _stamped_spec(b, m)
+            # variant + schedule chosen when the weight was packed are
+            # stamped on the PackedTensor (num_shards/dtype-proof —
+            # prepack_for keyed the tuned problems correctly, whatever
+            # the sharding)...
+            spec, sched = _stamped_spec(b, m)
         if spec is None:
             # ...and a manually packed tensor falls back to a registry
             # peek (non-mutating, so the engine's miss telemetry stays
@@ -118,9 +142,12 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
             cached = registry.peek(
                 Problem(m, k, b.orig_cols, str(a.dtype)).key())
             spec = cached.kernel if cached is not None else variants.BASELINE
+            sched = cached.schedule if cached is not None else None
         spec = _override_spec(spec, override, "skinny_a")
+        sched = sched_override or sched
         out = variants.run_skinny_a(spec, a2, b.blocks, bias, act,
-                                    bk=bk, bn=bn, packed=True, impl=impl)
+                                    bk=bk, bn=bn, packed=True, impl=impl,
+                                    schedule=sched)
         out = out[:, : b.orig_cols]
         return out.reshape(*lead, b.orig_cols)
 
@@ -129,23 +156,34 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
         plan = plan_for_matmul(m, k, n, str(a.dtype))
     if plan is not None and plan.orientation == "skinny_a":
         spec = _override_spec(plan.kernel, override, "skinny_a")
+        sched = sched_override or plan.schedule
         out = variants.run_skinny_a(spec, a2, b, bias, act, bk=plan.bk,
-                                    bn=plan.bn, packed=False, impl=impl)
+                                    bn=plan.bn, packed=False, impl=impl,
+                                    schedule=sched)
         return out[:, :n].reshape(*lead, n)
     if plan is not None and plan.orientation == "tall_a":
+        # bias/activation fuse into the variant's epilogue (DESIGN.md
+        # §11): the prefill path executes act(A@B + bias) in ONE kernel —
+        # no post-hoc pass, no extra (m, n) round trip over HBM
         spec = _override_spec(plan.kernel, override, "tall_a")
+        sched = sched_override or plan.schedule
         if plan.prepack:
             ap = pack(a2, plan.bm, plan.bk)
-            out = variants.run_tall_a(spec, ap.blocks, b, bm=plan.bm,
-                                      bk=plan.bk, packed=True, impl=impl)[:m]
+            out = variants.run_tall_a(spec, ap.blocks, b, bias, act,
+                                      bm=plan.bm, bk=plan.bk, packed=True,
+                                      impl=impl, schedule=sched)[:m, :n]
         else:
-            out = variants.run_tall_a(spec, a2, b, bm=plan.bm, bk=plan.bk,
-                                      packed=False, impl=impl)
-    else:
-        # accumulate in f32 like every planned path (ops.tsmm* all pass
-        # preferred_element_type) so bf16 results do not depend on whether
-        # a plan existed for the shape
-        out = jnp.dot(a2, b, preferred_element_type=jnp.float32).astype(a.dtype)
+            out = variants.run_tall_a(spec, a2, b, bias, act, bm=plan.bm,
+                                      bk=plan.bk, packed=False, impl=impl,
+                                      schedule=sched)
+        return out.reshape(*lead, n)
+    # unplanned fallback: accumulate in f32 like every planned path
+    # (ops.tsmm* all pass preferred_element_type) so bf16 results do not
+    # depend on whether a plan existed for the shape.  This is the ONLY
+    # path left with a post-hoc epilogue — XLA fuses it into the dot's
+    # consumer within the surrounding jit, and non-TSMM shapes are
+    # compute-bound anyway (DESIGN.md §2).
+    out = jnp.dot(a2, b, preferred_element_type=jnp.float32).astype(a.dtype)
     if bias is not None:
         out = out + bias.astype(out.dtype)
     if act is not None:
@@ -198,38 +236,48 @@ def prepack_for(m_skinny, w, *, num_shards: int = 1,
     if chosen is None:
         return None
     pk = pack(w, *chosen)
-    # stamp the per-bucket kernel variants on the packed weight so the
-    # decode path replays exactly what was tuned (DESIGN.md §10) — the
-    # registry key is shard/dtype-specific, but the stamp travels with
-    # the weight.  Each spec is RE-GATED at the conforming blocks the
-    # tensor was actually packed with (which may differ from the blocks
-    # the plan was tuned at): an infeasible or prepack=False-only
-    # variant falls back to the baseline instead of replaying a schedule
-    # that was never validated at this layout.
+    # stamp the per-bucket kernel variants + grid schedules on the packed
+    # weight so the decode path replays exactly what was tuned
+    # (DESIGN.md §10/§11) — the registry key is shard/dtype-specific, but
+    # the stamp travels with the weight.  Each (spec, schedule) is
+    # RE-GATED at the conforming blocks the tensor was actually packed
+    # with (which may differ from the blocks the plan was tuned at): an
+    # infeasible or prepack=False-only variant falls back to the
+    # baseline, an infeasible schedule (e.g. the multibuffer footprint
+    # blown at the bigger block) to the default, instead of replaying a
+    # program that was never validated at this layout.
     pk.kernel_specs = tuple(sorted(
-        (m, _stamp_spec_for_blocks(pset.plans[m], *chosen, hw=hw))
+        (m, *_stamp_spec_for_blocks(pset.plans[m], *chosen, hw=hw))
         for m in pset.plans))
     return pk
 
 
 def _stamp_spec_for_blocks(plan: Plan, bk: int, bn: int, *,
-                           hw: Optional[HwSpec] = None) -> KernelSpec:
-    """``plan``'s tuned kernel variant, re-validated for a PACKED weight
-    with blocks (bk, bn): a spec with no packed-path applicability
-    (fused_pack — there is no per-call pack left to fuse) or one that is
-    infeasible at these blocks (e.g. a k-split that no longer divides
-    the k-block count, or VMEM blown at the bigger block) degrades to
-    the baseline, which is always valid."""
-    spec = plan.kernel
-    if spec.is_baseline:
-        return spec
-    entry = variants.get_variant(spec.name).orientations.get("skinny_a")
-    if entry is None or entry.requires_prepack is False:
-        return KernelSpec()
-    trial = dataclasses.replace(plan, bk=bk, bn=bn, prepack=True)
-    if not feasible(trial, hw or default_hw()):
-        return KernelSpec()
-    return spec
+                           hw: Optional[HwSpec] = None) -> tuple:
+    """``plan``'s tuned (kernel variant, schedule), re-validated for a
+    PACKED weight with blocks (bk, bn): a spec with no packed-path
+    applicability (fused_pack — there is no per-call pack left to fuse)
+    or one that is infeasible at these blocks (e.g. a k-split that no
+    longer divides the k-block count, or VMEM blown at the bigger block)
+    degrades to the baseline; an infeasible schedule degrades to the
+    default, both of which are always valid."""
+    hw = hw or default_hw()
+    spec, sched = plan.kernel, plan.schedule
+    if not spec.is_baseline:
+        entry = variants.get_variant(spec.name).orientations.get("skinny_a")
+        if entry is None or entry.requires_prepack is False:
+            spec = KernelSpec()
+    trial = dataclasses.replace(plan, bk=bk, bn=bn, prepack=True,
+                                kernel=spec)
+    if not feasible(trial, hw):
+        # the schedule may be the only blown gate at these blocks — shed
+        # it first, then the variant (the conforming-block search
+        # guaranteed baseline+default feasibility)
+        sched = ScheduleSpec()
+        trial = dataclasses.replace(trial, schedule=sched)
+        if not feasible(trial, hw):
+            spec = KernelSpec()
+    return spec, sched
 
 
 def _conforming_blocks(problems, ks: int, ns: int, hw: HwSpec = TPU_V5E,

@@ -21,7 +21,8 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.hw import TPU_V5E, VMEM_USABLE_FRACTION, HwSpec, dtype_bytes
-from repro.core.plan import Plan, Problem
+from repro.core.plan import (FIXED_SCHEDULE_KERNELS, M_SPLIT_KERNELS,
+                             SEMANTICS, Plan, Problem)
 
 # The per-contraction-step overhead (DMA issue + semaphores) lives on
 # ``HwSpec.grid_overhead_s`` so the calibration pass (DESIGN.md §9) can
@@ -58,20 +59,57 @@ def contraction_steps(plan: Plan) -> int:
     return nk
 
 
+def grid_rank(plan: Plan) -> int:
+    """Rank of the Pallas grid the plan's (variant, schedule) launches —
+    what a ``dims`` override must match to apply (DESIGN.md §11)."""
+    name, _ = _variant(plan)
+    if name == "ksplit":
+        return 3
+    if plan.orientation == "tall_a" and name == "kmajor":
+        return 1          # fori_loop of single-axis row-panel passes
+    base = 2
+    if plan.orientation == "tall_a" and plan.schedule.m_split > 1:
+        base += 1         # the extra leading M-partition parallel axis
+    return base
+
+
+def overhead_steps(plan: Plan) -> float:
+    """Schedule-aware per-step overhead count — the regressor the fitted
+    ``HwSpec.grid_overhead_s`` multiplies (DESIGN.md §9/§11).
+
+    * the serial k-chain (``contraction_steps``) dominates, scaled by
+      ``2 / multibuffer``: classic double buffering exposes one DMA-issue
+      slot per step, deeper buffering hides proportionally more of it
+      (at ``multibuffer``x the streamed-operand VMEM footprint, gated by
+      :func:`feasible`);
+    * each extra M-partition adds one per-partition launch/semaphore
+      overhead (``m_split - 1``).
+
+    A default schedule reproduces ``contraction_steps`` exactly, so
+    calibration fits over pre-schedule measurement records are
+    unchanged."""
+    sched = plan.schedule
+    steps = contraction_steps(plan) * (2.0 / max(sched.multibuffer, 2))
+    return steps + (sched.m_split - 1)
+
+
 def vmem_bytes_needed(plan: Plan, hw: HwSpec = TPU_V5E) -> int:
-    """Working set of one grid step, with 2x double buffering on streamed
-    operands and a single fp32 accumulator (the Pallas pipeline's actual
-    residency).  Variant-aware: ``b_resident`` holds the WHOLE skinny
-    operand (no double buffering — it is never swapped), ``kmajor`` trades
-    the VMEM accumulator for an fp32 output block, and the k-split
-    variants stream fp32 partial blocks out."""
+    """Working set of one grid step, with ``schedule.multibuffer``-deep
+    buffering on the streamed k-loop operands (2 = the classic double
+    buffering the pre-schedule model assumed) and a single fp32
+    accumulator (the Pallas pipeline's actual residency).  Variant-aware:
+    ``b_resident`` holds the WHOLE skinny operand (never swapped, so no
+    multibuffering on it), ``kmajor`` trades the VMEM accumulator for an
+    fp32 output block, and the k-split variants stream fp32 partial
+    blocks out."""
     p = plan.problem
     eb = dtype_bytes(p.dtype)
     name, _ = _variant(plan)
+    mb = max(plan.schedule.multibuffer, 2)
     if plan.orientation == "tall_a":
         n_pad = _ceil(p.n, 128) * 128
-        a = 2 * plan.bm * plan.bk * eb
-        b = 2 * plan.bk * n_pad * eb
+        a = mb * plan.bm * plan.bk * eb
+        b = mb * plan.bk * n_pad * eb
         acc = plan.bm * n_pad * 4
         out = 2 * plan.bm * n_pad * eb
         if name == "b_resident":
@@ -87,8 +125,8 @@ def vmem_bytes_needed(plan: Plan, hw: HwSpec = TPU_V5E) -> int:
     else:  # skinny_a
         sl = hw.sublane.get(p.dtype, 8)
         m_pad = _ceil(p.m, sl) * sl
-        a = 2 * m_pad * plan.bk * eb          # streamed X panel
-        b = 2 * plan.bk * plan.bn * eb        # streamed W block
+        a = mb * m_pad * plan.bk * eb         # streamed X panel
+        b = mb * plan.bk * plan.bn * eb       # streamed W block
         acc = m_pad * plan.bn * 4
         out = 2 * m_pad * plan.bn * eb
         if name == "ksplit":
@@ -114,10 +152,46 @@ def feasible(plan: Plan, hw: HwSpec = TPU_V5E) -> bool:
         nk = plan.grid[1]
         if splits < 2 or nk % splits or nk // splits < 1:
             return False
+    # grid-schedule gates (DESIGN.md §11)
+    sched = plan.schedule
+    if sched.m_split < 1 or not 2 <= sched.multibuffer <= 4:
+        return False
+    if name in FIXED_SCHEDULE_KERNELS and not sched.is_default:
+        return False            # no streamed-operand pipeline to re-schedule
+    if sched.m_split > 1:
+        # M partitioning: tall-A only, supporting kernels only, and the
+        # partition count must cut the row-panel axis evenly (a ragged
+        # partition would replay a different program than was tuned)
+        if plan.orientation != "tall_a" or name not in M_SPLIT_KERNELS:
+            return False
+        if plan.grid[0] % sched.m_split:
+            return False
+    if sched.dims:
+        if any(d not in SEMANTICS for d in sched.dims):
+            return False
+        if len(sched.dims) != grid_rank(plan):
+            return False
     return vmem_bytes_needed(plan, hw) <= hw.vmem_bytes * VMEM_USABLE_FRACTION
 
 
-def hbm_traffic_bytes(plan: Plan) -> int:
+def epilogue_roundtrip_bytes(plan: Plan) -> int:
+    """HBM bytes of a POST-HOC bias/activation epilogue: one extra read +
+    write of the full (padded) output.  This is the traffic the fused
+    tall-A epilogues delete (DESIGN.md §11) — the fusion credit the
+    model grants every fused plan, and what ``hbm_traffic_bytes(...,
+    epilogue='posthoc')`` charges the pre-fusion behavior."""
+    p = plan.problem
+    eb = dtype_bytes(p.dtype)
+    if plan.orientation == "tall_a":
+        rows = _ceil(p.m, plan.bm) * plan.bm
+        cols = _ceil(p.n, 128) * 128
+    else:
+        rows = max(p.m, 8)
+        cols = _ceil(p.n, plan.bn) * plan.bn
+    return 2 * rows * cols * eb
+
+
+def hbm_traffic_bytes(plan: Plan, *, epilogue: str = "fused") -> int:
     """Total HBM bytes moved by one execution of the plan.
 
     Variant-aware (DESIGN.md §10): the kernel dimension of the search
@@ -134,7 +208,12 @@ def hbm_traffic_bytes(plan: Plan) -> int:
       weight (2x the weight bytes) that every re-packing variant pays;
     * pre-pack traffic of a ``prepack=True`` operand stays a one-time
       cost amortized over reuse (paper Eq.7) and is NOT counted here.
-    """
+
+    ``epilogue`` (DESIGN.md §11): the default ``"fused"`` models the
+    serving reality — bias+activation apply inside the kernel, so no
+    separate output round trip; ``"posthoc"`` adds
+    :func:`epilogue_roundtrip_bytes` (the pre-fusion behavior, kept so
+    benchmarks can quote the fusion credit)."""
     p = plan.problem
     eb = dtype_bytes(p.dtype)
     name, params = _variant(plan)
@@ -170,7 +249,10 @@ def hbm_traffic_bytes(plan: Plan) -> int:
             # a prepack=False skinny plan re-packs the weight every call
             # (tsmm_dot replay fidelity, DESIGN.md §9): read + write W
             b += 2 * nk * plan.bk * nn * plan.bn * eb
-    return a + b + c
+    total = a + b + c
+    if epilogue == "posthoc":
+        total += epilogue_roundtrip_bytes(plan)
+    return total
 
 
 def compute_time_s(plan: Plan, hw: HwSpec = TPU_V5E) -> float:
@@ -193,12 +275,15 @@ def memory_time_s(plan: Plan, hw: HwSpec = TPU_V5E) -> float:
 def features(plan: Plan, hw: HwSpec = TPU_V5E) -> tuple:
     """Nominal-roofline regressors for the calibration fit (DESIGN.md §9):
     (memory seconds at datasheet bandwidth, compute seconds at datasheet
-    FLOPs, contraction-step count).  A measured time t then fits
-    ``t ~= t_mem / hbm_efficiency + t_cmp / mxu_efficiency
-    + k_steps * grid_overhead_s`` — linear in the three coefficients."""
+    FLOPs, schedule-aware overhead-step count).  A measured time t then
+    fits ``t ~= t_mem / hbm_efficiency + t_cmp / mxu_efficiency
+    + steps * grid_overhead_s`` — linear in the three coefficients.  The
+    step count is :func:`overhead_steps`, so the schedule axis (§11)
+    flows into the same fit; default-schedule plans reproduce the
+    pre-schedule regressors exactly."""
     base = nominal(hw)
     return (memory_time_s(plan, base), compute_time_s(plan, base),
-            float(contraction_steps(plan)))
+            overhead_steps(plan))
 
 
 def predict(plan: Plan, hw: HwSpec = TPU_V5E) -> Plan:
@@ -215,12 +300,17 @@ def predict(plan: Plan, hw: HwSpec = TPU_V5E) -> Plan:
     Uncalibrated: the classic ``max(compute, memory)`` roofline.  A
     calibrated ``hw`` uses the additive form the least-squares fit solved
     (overlap is absorbed into the fitted efficiencies; the max() roofline
-    is not linear in its coefficients, so it cannot be fitted directly)."""
+    is not linear in its coefficients, so it cannot be fitted directly).
+
+    The overhead count is schedule-aware (:func:`overhead_steps`):
+    deeper multibuffering hides per-step DMA-issue latency, each extra
+    M partition adds a per-partition launch overhead — so grid geometry
+    ranks in the same units as blocks and variants (DESIGN.md §11)."""
     t_c = compute_time_s(plan, hw)
     t_m = memory_time_s(plan, hw)
-    nk = contraction_steps(plan)
+    steps = overhead_steps(plan)
     base = (t_c + t_m) if hw.calibrated else max(t_c, t_m)
-    score = base + nk * hw.grid_overhead_s
+    score = base + steps * hw.grid_overhead_s
     return dataclasses.replace(plan, t_compute=t_c, t_memory=t_m, score=score)
 
 

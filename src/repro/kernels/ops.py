@@ -82,15 +82,18 @@ def unpack_blocks(ap, m: int, k: int):
 # ---------------------------------------------------------------------------
 
 
-def _xla_packed_a(ap, b):
+def _xla_packed_a(ap, b, bias=None, act=None):
     nm, nk, bm, bk = ap.shape
     bb = b.reshape(nk, bk, b.shape[1])
     # (nm,nk,bm,bk) x (nk,bk,n) -> (nm,bm,n): contract blocked k exactly as
-    # the kernel's grid does, fp32 accumulation.
+    # the kernel's grid does, fp32 accumulation; bias+act apply to the
+    # fp32 result inside the same program, mirroring the fused epilogue.
     out = jnp.einsum(
         "mkab,kbn->man", ap, bb, preferred_element_type=jnp.float32
-    )
-    return out.reshape(nm * bm, b.shape[1]).astype(b.dtype)
+    ).reshape(nm * bm, b.shape[1])
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    return _ref.act_ref(out, act).astype(b.dtype)
 
 
 def _xla_skinny_a(x, wp, bias, act):
@@ -110,43 +113,70 @@ def _xla_skinny_a(x, wp, bias, act):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "impl"))
-def tsmm(a, b, *, bm: int = 512, bk: int = 512, impl: Optional[str] = None):
-    """Unpacked tall-A TSMM: C = A @ B (pads + slices internally)."""
+def _pad_bias(bias, npad: int):
+    if bias is None:
+        return None
+    return jnp.pad(bias, (0, npad - bias.shape[0]))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "act", "impl", "dims",
+                                    "m_split"))
+def tsmm(a, b, bias=None, *, bm: int = 512, bk: int = 512,
+         act: Optional[str] = None, impl: Optional[str] = None,
+         dims: tuple = (), m_split: int = 1):
+    """Unpacked tall-A TSMM: C = act(A @ B + bias) (pads + slices
+    internally).  The epilogue is fused into the kernel's final k step
+    (DESIGN.md §11); ``dims``/``m_split`` are the plan's grid schedule."""
     impl = _resolve(impl)
     m, k = a.shape
     n = b.shape[1]
     if impl == "ref":
-        return _ref.tsmm_ref(a, b)
+        return _ref.tsmm_ref(a, b, bias=bias, act=act)
     bm_ = min(bm, _ceil_to(m, sublane(a.dtype)))
     mp, kp = _ceil_to(m, bm_), _ceil_to(k, bk)
     npad = _ceil_to(n, 128)
     ap_, bp_ = pad2(a, mp, kp), pad2(b, kp, npad)
     if impl == "xla":
-        out = jnp.dot(ap_, bp_, preferred_element_type=jnp.float32).astype(a.dtype)
-    else:
-        out = _k.tsmm_tall_a(ap_, bp_, bm=bm_, bk=bk,
-                             interpret=(impl == "pallas_interpret"))
+        # slice BEFORE the epilogue: XLA fuses bias/act into the dot's
+        # consumer either way, but the activation then runs on the real
+        # (m, n) output, not the 128-padded columns (a Pallas kernel pays
+        # nothing for the pad — the VPU tile is 128 lanes regardless)
+        out = jnp.dot(ap_, bp_, preferred_element_type=jnp.float32)[:m, :n]
+        if bias is not None:
+            out = out + bias.astype(jnp.float32)[None, :]
+        return _ref.act_ref(out, act).astype(a.dtype)
+    out = _k.tsmm_tall_a(ap_, bp_, _pad_bias(bias, npad), bm=bm_, bk=bk,
+                         act=act, dims=dims, m_split=m_split,
+                         interpret=(impl == "pallas_interpret"))
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def tsmm_packed(ap, b, *, impl: Optional[str] = None):
-    """Packed tall-A TSMM: C = unpack(Ap) @ B.  Ap (nm,nk,bm,bk)."""
+@functools.partial(jax.jit,
+                   static_argnames=("act", "impl", "dims", "m_split"))
+def tsmm_packed(ap, b, bias=None, *, act: Optional[str] = None,
+                impl: Optional[str] = None, dims: tuple = (),
+                m_split: int = 1):
+    """Packed tall-A TSMM: C = act(unpack(Ap) @ B + bias).
+    Ap (nm,nk,bm,bk); fused epilogue + grid schedule as in ``tsmm``."""
     impl = _resolve(impl)
     nm, nk, bm, bk = ap.shape
     n = b.shape[1]
-    bp_ = pad2(b, nk * bk, _ceil_to(n, 128))
+    npad = _ceil_to(n, 128)
+    bp_ = pad2(b, nk * bk, npad)
+    biasp = _pad_bias(bias, npad)
     if impl == "xla":
-        out = _xla_packed_a(ap, bp_)
+        out = _xla_packed_a(ap, bp_, biasp, act)
     else:
-        out = _k.tsmm_packed_a(ap, bp_, interpret=(impl == "pallas_interpret"))
+        out = _k.tsmm_packed_a(ap, bp_, biasp, act=act, dims=dims,
+                               m_split=m_split,
+                               interpret=(impl == "pallas_interpret"))
     return out[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("act", "impl"))
+@functools.partial(jax.jit, static_argnames=("act", "impl", "dims"))
 def tsmm_skinny(x, wp, bias=None, *, act: Optional[str] = None,
-                impl: Optional[str] = None):
+                impl: Optional[str] = None, dims: tuple = ()):
     """Skinny-A x packed-W with fused epilogue: act(X @ W + bias).
 
     X (m, K) — m is the skinny dim (decode batch); Wp (nk, nn, bk, bn).
@@ -161,6 +191,6 @@ def tsmm_skinny(x, wp, bias=None, *, act: Optional[str] = None,
         return out[:, : (bias.shape[0] if bias is not None else n)]
     mp = _ceil_to(m, sublane(x.dtype))
     xp = pad2(x, mp, nk * bk)
-    out = _k.tsmm_skinny_a(xp, wp, biasp, act=act,
+    out = _k.tsmm_skinny_a(xp, wp, biasp, act=act, dims=dims,
                            interpret=(impl == "pallas_interpret"))
     return out[:m, : (bias.shape[0] if bias is not None else n)]

@@ -36,6 +36,25 @@ def _compiler_params(dimension_semantics):
         return pltpu.TPUCompilerParams(dimension_semantics=dimension_semantics)
 
 
+def _semantics(dims, default: tuple) -> tuple:
+    """Grid dimension semantics: the schedule's override when it matches
+    the grid rank, else the kernel's default (a rank mismatch can only
+    come from an env-override ScheduleSpec — enumerated schedules are
+    gated by ``vmem_model.feasible``)."""
+    dims = tuple(dims or ())
+    return dims if len(dims) == len(default) else default
+
+
+def _m_split_of(nm: int, m_split: int) -> int:
+    """Clamp an M-partition request to a divisor of the row-panel count
+    (env-override schedules; enumerated plans are gated by the vmem
+    model's divisibility check)."""
+    ms = max(1, min(int(m_split), nm))
+    while nm % ms:
+        ms -= 1
+    return ms
+
+
 def _epilogue(acc, bias_ref, act):
     out = acc
     if bias_ref is not None:
@@ -54,8 +73,8 @@ def _epilogue(acc, bias_ref, act):
 # ---------------------------------------------------------------------------
 
 
-def _tall_a_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk):
-    @pl.when(pl.program_id(1) == 0)
+def _tall_a_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, nk, k_axis, act):
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -63,32 +82,75 @@ def _tall_a_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk):
         a_ref[...], b_ref[...], preferred_element_type=jnp.float32
     )
 
-    @pl.when(pl.program_id(1) == nk - 1)
+    @pl.when(pl.program_id(k_axis) == nk - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = _epilogue(acc_ref[...], bias_ref, act).astype(o_ref.dtype)
 
 
-def tsmm_tall_a(a, b, *, bm: int, bk: int, interpret: bool = False):
-    """C = A @ B.  A (M,K) with M % bm == 0, K % bk == 0; B (K,N), N is the
-    full skinny dim kept resident per grid step (the paper: every worker
-    holds the whole B block)."""
+def _tall_a_kernel_nobias(a_ref, b_ref, o_ref, acc_ref, *, nk, k_axis, act):
+    _tall_a_kernel(a_ref, b_ref, None, o_ref, acc_ref, nk=nk, k_axis=k_axis,
+                   act=act)
+
+
+def _tall_grid(nm: int, nk: int, m_split: int):
+    """(grid, k_axis, index-map prefix arity, default semantics) for the
+    row-panel tall-A kernels.  With ``m_split > 1`` the row-panel axis is
+    partitioned into per-core chunks behind an extra leading PARALLEL
+    grid axis (the paper's runtime thread-level M partitioning); the k
+    axis stays innermost so each output block's accumulator is revisited
+    on consecutive steps (the Pallas revisiting-grid contract)."""
+    ms = _m_split_of(nm, m_split)
+    if ms > 1:
+        nmi = nm // ms
+        def row(p, i):
+            return p * nmi + i
+        return ((ms, nmi, nk), 2, row, ("parallel", "parallel", "arbitrary"))
+    return ((nm, nk), 1, None, ("parallel", "arbitrary"))
+
+
+def tsmm_tall_a(a, b, bias=None, *, bm: int, bk: int, act=None,
+                interpret: bool = False, dims=(), m_split: int = 1):
+    """C = act(A @ B + bias).  A (M,K) with M % bm == 0, K % bk == 0;
+    B (K,N), N is the full skinny dim kept resident per grid step (the
+    paper: every worker holds the whole B block).  The epilogue is FUSED
+    into the final k step's ``_done`` write — bias+activation apply to
+    the fp32 accumulator while it is still in VMEM, so the (M, N) output
+    never makes an extra HBM round trip (DESIGN.md §11)."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2 and m % bm == 0 and k % bk == 0, (a.shape, b.shape, bm, bk)
     nm, nk = m // bm, k // bk
+    grid, k_axis, row, default = _tall_grid(nm, nk, m_split)
+    if row is None:
+        in_specs = [pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+                    pl.BlockSpec((bk, n), lambda i, j: (j, 0))]
+        o_spec = pl.BlockSpec((bm, n), lambda i, j: (i, 0))
+        bias_spec = pl.BlockSpec((n,), lambda i, j: (0,))
+    else:
+        in_specs = [pl.BlockSpec((bm, bk), lambda p, i, j: (row(p, i), j)),
+                    pl.BlockSpec((bk, n), lambda p, i, j: (j, 0))]
+        o_spec = pl.BlockSpec((bm, n), lambda p, i, j: (row(p, i), 0))
+        bias_spec = pl.BlockSpec((n,), lambda p, i, j: (0,))
+    args = [a, b]
+    if bias is not None:
+        assert bias.shape == (n,), (bias.shape, n)
+        in_specs.append(bias_spec)
+        args.append(bias)
+        kernel = functools.partial(_tall_a_kernel, nk=nk, k_axis=k_axis,
+                                   act=act)
+    else:
+        kernel = functools.partial(_tall_a_kernel_nobias, nk=nk,
+                                   k_axis=k_axis, act=act)
     return pl.pallas_call(
-        functools.partial(_tall_a_kernel, nk=nk),
-        grid=(nm, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
-            pl.BlockSpec((bk, n), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        compiler_params=_compiler_params(_semantics(dims, default)),
         interpret=interpret,
-    )(a, b)
+    )(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -96,8 +158,9 @@ def tsmm_tall_a(a, b, *, bm: int, bk: int, interpret: bool = False):
 # ---------------------------------------------------------------------------
 
 
-def _packed_a_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk):
-    @pl.when(pl.program_id(1) == 0)
+def _packed_a_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, nk, k_axis,
+                     act):
+    @pl.when(pl.program_id(k_axis) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -105,32 +168,59 @@ def _packed_a_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk):
         a_ref[0, 0], b_ref[...], preferred_element_type=jnp.float32
     )
 
-    @pl.when(pl.program_id(1) == nk - 1)
+    @pl.when(pl.program_id(k_axis) == nk - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = _epilogue(acc_ref[...], bias_ref, act).astype(o_ref.dtype)
 
 
-def tsmm_packed_a(ap, b, *, interpret: bool = False):
-    """C = unpack(Ap) @ B with Ap (nm, nk, bm, bk) block-major.
+def _packed_a_kernel_nobias(a_ref, b_ref, o_ref, acc_ref, *, nk, k_axis, act):
+    _packed_a_kernel(a_ref, b_ref, None, o_ref, acc_ref, nk=nk, k_axis=k_axis,
+                     act=act)
+
+
+def tsmm_packed_a(ap, b, bias=None, *, act=None, interpret: bool = False,
+                  dims=(), m_split: int = 1):
+    """C = act(unpack(Ap) @ B + bias) with Ap (nm, nk, bm, bk) block-major.
 
     Every A DMA is one contiguous (bm*bk)-element block — no strided HBM
-    reads, no relayout: the pre-pack payoff."""
+    reads, no relayout: the pre-pack payoff.  Epilogue fused into the
+    final k step (see ``tsmm_tall_a``); ``m_split`` partitions the
+    row-panel axis into per-core parallel chunks."""
     nm, nk, bm, bk = ap.shape
     k, n = b.shape
     assert k == nk * bk, (ap.shape, b.shape)
+    grid, k_axis, row, default = _tall_grid(nm, nk, m_split)
+    if row is None:
+        in_specs = [pl.BlockSpec((1, 1, bm, bk), lambda i, j: (i, j, 0, 0)),
+                    pl.BlockSpec((bk, n), lambda i, j: (j, 0))]
+        o_spec = pl.BlockSpec((bm, n), lambda i, j: (i, 0))
+        bias_spec = pl.BlockSpec((n,), lambda i, j: (0,))
+    else:
+        in_specs = [pl.BlockSpec((1, 1, bm, bk),
+                                 lambda p, i, j: (row(p, i), j, 0, 0)),
+                    pl.BlockSpec((bk, n), lambda p, i, j: (j, 0))]
+        o_spec = pl.BlockSpec((bm, n), lambda p, i, j: (row(p, i), 0))
+        bias_spec = pl.BlockSpec((n,), lambda p, i, j: (0,))
+    args = [ap, b]
+    if bias is not None:
+        assert bias.shape == (n,), (bias.shape, n)
+        in_specs.append(bias_spec)
+        args.append(bias)
+        kernel = functools.partial(_packed_a_kernel, nk=nk, k_axis=k_axis,
+                                   act=act)
+    else:
+        kernel = functools.partial(_packed_a_kernel_nobias, nk=nk,
+                                   k_axis=k_axis, act=act)
     return pl.pallas_call(
-        functools.partial(_packed_a_kernel, nk=nk),
-        grid=(nm, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bm, bk), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((bk, n), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((nm * bm, n), b.dtype),
         scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        compiler_params=_compiler_params(_semantics(dims, default)),
         interpret=interpret,
-    )(ap, b)
+    )(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -193,7 +283,8 @@ def _tall_ksplit_kernel(a_ref, b_ref, o_ref, acc_ref, *, nki, packed):
 
 
 def tsmm_tall_a_ksplit(a, b, *, bm: int = 0, bk: int = 0, splits: int = 2,
-                       packed: bool = False, interpret: bool = False):
+                       packed: bool = False, interpret: bool = False,
+                       dims=()):
     """k-split tall-A: the contraction axis is cut into ``splits``
     independent partial sums (one grid dim), each accumulated in VMEM and
     written as an fp32 partial; the caller's ``sum(axis=0)`` is the fused
@@ -226,7 +317,8 @@ def tsmm_tall_a_ksplit(a, b, *, bm: int = 0, bk: int = 0, splits: int = 2,
         out_specs=pl.BlockSpec((1, bm, n), lambda i, s, j: (s, i, 0)),
         out_shape=jax.ShapeDtypeStruct((splits, m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=_compiler_params(("parallel", "parallel", "arbitrary")),
+        compiler_params=_compiler_params(
+            _semantics(dims, ("parallel", "parallel", "arbitrary"))),
         interpret=interpret,
     )(a, b)
 
@@ -238,7 +330,8 @@ def _kmajor_step_kernel(a_ref, b_ref, acc_ref, o_ref, *, packed):
 
 
 def tsmm_tall_a_kmajor(a, b, *, bm: int = 0, bk: int = 0,
-                       packed: bool = False, interpret: bool = False):
+                       packed: bool = False, interpret: bool = False,
+                       dims=()):
     """k-outermost loop order: each k step sweeps every output row panel,
     accumulating into an fp32 output revisited in HBM.  B's k-block is
     fetched ONCE per k step (vs once per row panel in the baseline) at
@@ -275,7 +368,7 @@ def tsmm_tall_a_kmajor(a, b, *, bm: int = 0, bk: int = 0,
         out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         input_output_aliases={2: 0},
-        compiler_params=_compiler_params(("arbitrary",)),
+        compiler_params=_compiler_params(_semantics(dims, ("arbitrary",))),
         interpret=interpret,
     )
 
@@ -290,8 +383,9 @@ def tsmm_tall_a_kmajor(a, b, *, bm: int = 0, bk: int = 0,
     return jax.lax.fori_loop(0, nk, step, jnp.zeros((m, n), jnp.float32))
 
 
-def _tall_bres_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, bk, packed):
-    j = pl.program_id(1)
+def _tall_bres_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, nk, bk,
+                      k_axis, packed, act):
+    j = pl.program_id(k_axis)
 
     @pl.when(j == 0)
     def _init():
@@ -304,16 +398,24 @@ def _tall_bres_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk, bk, packed):
 
     @pl.when(j == nk - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = _epilogue(acc_ref[...], bias_ref, act).astype(o_ref.dtype)
 
 
-def tsmm_tall_a_bres(a, b, *, bm: int = 0, bk: int = 0,
-                     packed: bool = False, interpret: bool = False):
+def _tall_bres_kernel_nobias(a_ref, b_ref, o_ref, acc_ref, *, nk, bk, k_axis,
+                             packed, act):
+    _tall_bres_kernel(a_ref, b_ref, None, o_ref, acc_ref, nk=nk, bk=bk,
+                      k_axis=k_axis, packed=packed, act=act)
+
+
+def tsmm_tall_a_bres(a, b, bias=None, *, bm: int = 0, bk: int = 0, act=None,
+                     packed: bool = False, interpret: bool = False,
+                     dims=(), m_split: int = 1):
     """B-resident tall-A: the WHOLE skinny operand (K, N) is held in VMEM
     for the kernel's lifetime (constant index map -> fetched once), and
     each grid step dynamic-slices its k panel.  Removes the baseline's
     per-row-panel B reload traffic; only feasible while K*N fits VMEM
-    (the vmem model enforces that per variant)."""
+    (the vmem model enforces that per variant).  Epilogue fused into the
+    final k step; ``m_split`` partitions the row-panel axis."""
     if packed:
         nm, nk, bm, bk = a.shape
         m = nm * bm
@@ -324,23 +426,42 @@ def tsmm_tall_a_bres(a, b, *, bm: int = 0, bk: int = 0,
         nm, nk = m // bm, k // bk
     assert b.shape[0] == k, (a.shape, b.shape)
     n = b.shape[1]
-    if packed:
-        a_spec = pl.BlockSpec((1, 1, bm, bk), lambda i, j: (i, j, 0, 0))
+    grid, k_axis, row, default = _tall_grid(nm, nk, m_split)
+    if row is None:
+        a_spec = (pl.BlockSpec((1, 1, bm, bk), lambda i, j: (i, j, 0, 0))
+                  if packed else pl.BlockSpec((bm, bk), lambda i, j: (i, j)))
+        b_spec = pl.BlockSpec((k, n), lambda i, j: (0, 0))
+        o_spec = pl.BlockSpec((bm, n), lambda i, j: (i, 0))
+        bias_spec = pl.BlockSpec((n,), lambda i, j: (0,))
     else:
-        a_spec = pl.BlockSpec((bm, bk), lambda i, j: (i, j))
+        a_spec = (pl.BlockSpec((1, 1, bm, bk),
+                               lambda p, i, j: (row(p, i), j, 0, 0))
+                  if packed else
+                  pl.BlockSpec((bm, bk), lambda p, i, j: (row(p, i), j)))
+        b_spec = pl.BlockSpec((k, n), lambda p, i, j: (0, 0))
+        o_spec = pl.BlockSpec((bm, n), lambda p, i, j: (row(p, i), 0))
+        bias_spec = pl.BlockSpec((n,), lambda p, i, j: (0,))
+    in_specs = [a_spec, b_spec]
+    args = [a, b]
+    if bias is not None:
+        assert bias.shape == (n,), (bias.shape, n)
+        in_specs.append(bias_spec)
+        args.append(bias)
+        kernel = functools.partial(_tall_bres_kernel, nk=nk, bk=bk,
+                                   k_axis=k_axis, packed=packed, act=act)
+    else:
+        kernel = functools.partial(_tall_bres_kernel_nobias, nk=nk, bk=bk,
+                                   k_axis=k_axis, packed=packed, act=act)
     return pl.pallas_call(
-        functools.partial(_tall_bres_kernel, nk=nk, bk=bk, packed=packed),
-        grid=(nm, nk),
-        in_specs=[
-            a_spec,
-            pl.BlockSpec((k, n), lambda i, j: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), b.dtype),
         scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        compiler_params=_compiler_params(_semantics(dims, default)),
         interpret=interpret,
-    )(a, b)
+    )(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -366,7 +487,8 @@ def _skinny_a_kernel_nobias(x_ref, w_ref, o_ref, acc_ref, *, nk, act):
     _skinny_a_kernel(x_ref, w_ref, None, o_ref, acc_ref, nk=nk, act=act)
 
 
-def tsmm_skinny_a(x, wp, bias=None, *, act=None, interpret: bool = False):
+def tsmm_skinny_a(x, wp, bias=None, *, act=None, interpret: bool = False,
+                  dims=()):
     """C = act(X @ unpack(Wp) + bias).
 
     X (m, K) with skinny m (decode batch); Wp (nk, nn, bk, bn) packed
@@ -395,7 +517,8 @@ def tsmm_skinny_a(x, wp, bias=None, *, act=None, interpret: bool = False):
         out_specs=pl.BlockSpec((m, bn), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
-        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        compiler_params=_compiler_params(
+            _semantics(dims, ("parallel", "arbitrary"))),
         interpret=interpret,
     )(*args)
 
@@ -420,7 +543,8 @@ def _skinny_ksplit_kernel(x_ref, w_ref, o_ref, acc_ref, *, nki, packed):
 
 
 def tsmm_skinny_a_ksplit(x, w, *, bk: int = 0, bn: int = 0, splits: int = 2,
-                         packed: bool = True, interpret: bool = False):
+                         packed: bool = True, interpret: bool = False,
+                         dims=()):
     """k-split skinny-A: partial sums over k splits, fp32 partials out
     (splits, m, N); caller sums + applies the epilogue (fused reduction).
     ``w`` is packed (nk, nn, bk, bn) when ``packed`` else natural (K, N).
@@ -451,7 +575,8 @@ def tsmm_skinny_a_ksplit(x, w, *, bk: int = 0, bn: int = 0, splits: int = 2,
         out_specs=pl.BlockSpec((1, m, bn), lambda i, s, j: (s, 0, i)),
         out_shape=jax.ShapeDtypeStruct((splits, m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
-        compiler_params=_compiler_params(("parallel", "parallel", "arbitrary")),
+        compiler_params=_compiler_params(
+            _semantics(dims, ("parallel", "parallel", "arbitrary"))),
         interpret=interpret,
     )(x, w)
 
@@ -475,7 +600,7 @@ def _skinny_natural_kernel_nobias(x_ref, w_ref, o_ref, acc_ref, *, nk, act):
 
 
 def tsmm_skinny_a_natural(x, w, bias=None, *, bk: int, bn: int, act=None,
-                          interpret: bool = False):
+                          interpret: bool = False, dims=()):
     """Pack-on-the-fly skinny-A: W is read in its NATURAL (K, N) layout —
     each grid step DMAs a strided (bk, bn) tile straight out of the
     unpacked weight and fuses the epilogue, so prepack=False shapes skip
@@ -504,6 +629,7 @@ def tsmm_skinny_a_natural(x, w, bias=None, *, bk: int, bn: int, act=None,
         out_specs=pl.BlockSpec((m, bn), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
-        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        compiler_params=_compiler_params(
+            _semantics(dims, ("parallel", "arbitrary"))),
         interpret=interpret,
     )(*args)

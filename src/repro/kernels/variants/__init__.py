@@ -25,7 +25,7 @@ __all__ = [
     "BASELINE", "BASELINE_NAME", "KernelSpec", "OrientationEntry",
     "VariantDef", "applies_to", "get_variant", "parse_spec",
     "register_variant", "specs_for", "variant_names", "run_tall_a",
-    "run_skinny_a", "verify_variants",
+    "run_skinny_a", "verify_variants", "verify_schedules",
 ]
 
 
@@ -37,30 +37,36 @@ def applies_to(spec: KernelSpec, orientation: str) -> bool:
     return orientation in get_variant(spec.name).orientations
 
 
-def run_tall_a(spec: KernelSpec, a, b, *, bm: int = 0, bk: int = 0,
-               packed: bool = False, impl=None):
+def run_tall_a(spec: KernelSpec, a, b, bias=None, act=None, *, bm: int = 0,
+               bk: int = 0, packed: bool = False, impl=None, schedule=None):
     """Dispatch a tall-A matmul to the variant ``spec`` names.
 
     ``a`` is natural (M, K) or pre-packed (nm, nk, bm, bk) per ``packed``
     (the caller owns the pack, mirroring the baseline's cost placement).
+    ``bias``/``act`` fuse into the variant's epilogue — the prefill path's
+    act(A@B + bias) executes in one kernel, no post-hoc (M, N) pass
+    (DESIGN.md §11).  ``schedule`` is the plan's ScheduleSpec (grid
+    semantics / M partitioning / multibuffer depth); None = default.
     """
     entry = get_variant(spec.name).entry("tall_a")
-    return entry.fn(a, b, bm=bm, bk=bk, packed=packed, impl=impl,
-                    **spec.kwargs())
+    return entry.fn(a, b, bias, act, bm=bm, bk=bk, packed=packed, impl=impl,
+                    schedule=schedule, **spec.kwargs())
 
 
 def run_skinny_a(spec: KernelSpec, x, w, bias=None, act=None, *,
-                 bk: int = 0, bn: int = 0, packed: bool = True, impl=None):
+                 bk: int = 0, bn: int = 0, packed: bool = True, impl=None,
+                 schedule=None):
     """Dispatch a skinny-A (decode) matmul to the variant ``spec`` names.
 
     ``w`` is the packed (nk, nn, bk, bn) blocks when ``packed`` else the
     natural (K, N) weight.  A ``fused_pack`` spec against an
     already-packed weight falls back to the baseline kernel inside the
-    variant (there is no pack left to fuse).
+    variant (there is no pack left to fuse).  ``schedule`` as in
+    :func:`run_tall_a`.
     """
     entry = get_variant(spec.name).entry("skinny_a")
     return entry.fn(x, w, bias, act, bk=bk, bn=bn, packed=packed, impl=impl,
-                    **spec.kwargs())
+                    schedule=schedule, **spec.kwargs())
 
 
 # ---------------------------------------------------------------------------
@@ -94,12 +100,16 @@ def verify_variants(impl: str = "pallas_interpret", *,
                            ).astype(dt)
 
     # one tiny problem per regime; blocks sized so every variant's
-    # constraints (k-split divisibility, VMEM residency) are exercised
+    # constraints (k-split divisibility, VMEM residency) are exercised.
+    # Tall-A verifies WITH a bias so the fused epilogue (DESIGN.md §11)
+    # is exercised in every variant's _done path.
     a, bt = mk((256, 512)), mk((512, 8))          # tall: M=256, K=512, N=8
     x, w = mk((4, 512)), mk((512, 256))           # skinny: m=4, K=512, N=256
     bias = mk((256,))
+    bias_t = mk((8,))
     want_tall = np.asarray(
-        jnp.dot(a.astype(jnp.float32), bt.astype(jnp.float32)), np.float32)
+        jnp.dot(a.astype(jnp.float32), bt.astype(jnp.float32))
+        + bias_t.astype(jnp.float32)[None, :], np.float32)
     want_skinny = np.asarray(
         jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
         + bias.astype(jnp.float32)[None, :], np.float32)
@@ -118,7 +128,8 @@ def verify_variants(impl: str = "pallas_interpret", *,
                         for packed in (False, True):
                             arg = (ops.pack_blocks(a, 128, 128) if packed
                                    else a)
-                            got = run_tall_a(spec, arg, bt, bm=128, bk=128,
+                            got = run_tall_a(spec, arg, bt, bias_t,
+                                             bm=128, bk=128,
                                              packed=packed, impl=impl)
                             np.testing.assert_allclose(
                                 np.asarray(got, np.float32)[:256, :8],
@@ -138,6 +149,88 @@ def verify_variants(impl: str = "pallas_interpret", *,
                                 np.asarray(got, np.float32)[:4, :256],
                                 want_skinny, **tol)
                 except Exception as e:  # a broken variant must not abort the sweep
+                    row["ok"] = False
+                    row["error"] = f"{type(e).__name__}: {e}"
+                out.append(row)
+    return out
+
+
+def verify_schedules(impl: str = "pallas_interpret", *,
+                     dtype: str = "float32") -> list:
+    """Run EVERY enumerable grid schedule (DESIGN.md §11) against every
+    registered variant it applies to, on one tiny shape, and compare with
+    the jnp reference — the schedule-axis analogue of
+    :func:`verify_variants`, gated the same way by ``install --check``.
+
+    Also exercises a dimension-semantics override (all-``arbitrary``),
+    which every kernel must accept.  Returns result dicts
+    ``{spec, schedule, orientation, ok, error}``."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.plan import ScheduleSpec, schedules_for
+    from repro.kernels import ops
+    from repro.kernels.variants.spec import _registry
+
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.dtype(dtype)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == "bfloat16" else \
+        dict(rtol=2e-4, atol=2e-4)
+    rng = np.random.default_rng(1)
+
+    def mk(shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32)
+                           ).astype(dt)
+
+    # M=512/bm=128 -> 4 row panels, so m_split in {2, 4} divides evenly
+    a, bt = mk((512, 512)), mk((512, 8))
+    x, w = mk((4, 512)), mk((512, 256))
+    bias_t, bias_s = mk((8,)), mk((256,))
+    want_tall = np.asarray(
+        jnp.dot(a.astype(jnp.float32), bt.astype(jnp.float32))
+        + bias_t.astype(jnp.float32)[None, :], np.float32)
+    want_skinny = np.asarray(
+        jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+        + bias_s.astype(jnp.float32)[None, :], np.float32)
+
+    out = []
+    for name in sorted(_registry()):
+        vdef = get_variant(name)
+        for orientation, entry in sorted(vdef.orientations.items()):
+            spec = KernelSpec(name) if not entry.param_grid else \
+                KernelSpec.make(name, **{k: v[0]
+                                         for k, v in entry.param_grid})
+            scheds = list(schedules_for(orientation, name))
+            # dims / deeper multibuffer are not enumerated by the
+            # autotuner (debugging knob; inexpressible on this Pallas)
+            # but both are reachable via REPRO_TSMM_SCHEDULE: verify the
+            # all-arbitrary override and an mb=3 schedule too (a
+            # mismatched dims length falls back to default semantics)
+            scheds.append(ScheduleSpec(dims=("arbitrary", "arbitrary")))
+            if name not in ("kmajor",):
+                scheds.append(ScheduleSpec(multibuffer=3))
+            for sched in scheds:
+                row = {"spec": spec.key(), "schedule": sched.key(),
+                       "orientation": orientation, "ok": True, "error": ""}
+                try:
+                    if orientation == "tall_a":
+                        got = run_tall_a(spec, a, bt, bias_t, bm=128,
+                                         bk=128, packed=False, impl=impl,
+                                         schedule=sched)
+                        np.testing.assert_allclose(
+                            np.asarray(got, np.float32)[:512, :8],
+                            want_tall, **tol)
+                    else:
+                        pre = entry.requires_prepack
+                        arg = w if pre is False else \
+                            ops.pack_blocks(w, 128, 128)
+                        got = run_skinny_a(spec, x, arg, bias_s, None,
+                                           bk=128, bn=128,
+                                           packed=pre is not False,
+                                           impl=impl, schedule=sched)
+                        np.testing.assert_allclose(
+                            np.asarray(got, np.float32)[:4, :256],
+                            want_skinny, **tol)
+                except Exception as e:
                     row["ok"] = False
                     row["error"] = f"{type(e).__name__}: {e}"
                 out.append(row)

@@ -3,7 +3,8 @@
 Each registered function is one competing inner kernel for the decode
 hot path (X (m,K) skinny x W (K,N) wide weight).  Shared contract:
 
-    fn(x, w, bias=None, act=None, *, bk, bn, packed, impl, **params)
+    fn(x, w, bias=None, act=None, *, bk, bn, packed, impl, schedule,
+       **params)
 
 ``w`` is the packed (nk, nn, bk, bn) block-major weight when ``packed``
 is True (the serving path: packed once at load), or the natural (K, N)
@@ -11,7 +12,11 @@ weight when False — in that case the variant OWNS the per-call layout
 cost: baseline/ksplit/epilogue_split re-pack eagerly on every call
 (exactly what ``tsmm_dot`` replays, so the evaluator times it), while
 ``fused_pack`` reads the natural layout inside the kernel and skips the
-pack pass entirely.  Returns (m, nn*bn) — the caller slices padded
+pack pass entirely.  ``schedule`` is the plan's ScheduleSpec (DESIGN.md
+§11): the dimension-semantics override threads into the Pallas grid; the
+M-partition factor does not apply to this regime (the wide output axis is
+already the parallel grid axis) and multibuffer depth is a cost-model/
+feasibility knob.  Returns (m, nn*bn) — the caller slices padded
 columns, as with ``ops.tsmm_skinny``.
 """
 
@@ -23,18 +28,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.core.plan import DEFAULT_SCHEDULE
 from repro.kernels import ops
 from repro.kernels import ref as _ref
 from repro.kernels import tsmm as _k
-from repro.kernels.ops import _ceil_to
+from repro.kernels.ops import _ceil_to, _pad_bias
 from repro.kernels.variants.spec import register_variant
 from repro.kernels.variants.tall import split_divisor
-
-
-def _pad_bias(bias, n: int):
-    if bias is None:
-        return None
-    return jnp.pad(bias, (0, n - bias.shape[0]))
 
 
 # ---------------------------------------------------------------------------
@@ -46,12 +46,13 @@ def _pad_bias(bias, n: int):
                   doc="packed-W fused bias+activation epilogue (the "
                       "original decode kernel)")
 def skinny_baseline(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
-                    packed: bool = True, impl=None):
+                    packed: bool = True, impl=None, schedule=None):
+    sch = schedule or DEFAULT_SCHEDULE
     if not packed:
         # per-call pack — deliberately eager so the evaluator's timed
         # region pays it (prepack=False replay fidelity, DESIGN.md §9)
         w = packing.pack(w, bk, bn).blocks
-    return ops.tsmm_skinny(x, w, bias, act=act, impl=impl)
+    return ops.tsmm_skinny(x, w, bias, act=act, impl=impl, dims=sch.dims)
 
 
 # ---------------------------------------------------------------------------
@@ -73,10 +74,12 @@ def _split_epilogue(out, bias, act):
                   doc="matmul kernel + separate bias/activation pass "
                       "(epilogue NOT fused)")
 def skinny_epilogue_split(x, w, bias=None, act=None, *, bk: int = 0,
-                          bn: int = 0, packed: bool = True, impl=None):
+                          bn: int = 0, packed: bool = True, impl=None,
+                          schedule=None):
+    sch = schedule or DEFAULT_SCHEDULE
     if not packed:
         w = packing.pack(w, bk, bn).blocks
-    out = ops.tsmm_skinny(x, w, None, act=None, impl=impl)
+    out = ops.tsmm_skinny(x, w, None, act=None, impl=impl, dims=sch.dims)
     if bias is None and act in (None, "none"):
         return out
     return _split_epilogue(out, _pad_bias(bias, out.shape[1]), act)
@@ -88,8 +91,9 @@ def skinny_epilogue_split(x, w, bias=None, act=None, *, bk: int = 0,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bk", "bn", "splits", "act", "impl"))
-def _ksplit_compute(x, wp, bias, *, bk, bn, splits, act, impl):
+                   static_argnames=("bk", "bn", "splits", "act", "impl",
+                                    "dims"))
+def _ksplit_compute(x, wp, bias, *, bk, bn, splits, act, impl, dims=()):
     m = x.shape[0]
     nk, nn = wp.shape[0], wp.shape[1]
     if impl == "xla":
@@ -101,7 +105,7 @@ def _ksplit_compute(x, wp, bias, *, bk, bn, splits, act, impl):
         parts = parts.reshape(splits, m, nn * bn)
     else:
         parts = _k.tsmm_skinny_a_ksplit(x, wp, bk=bk, bn=bn, splits=splits,
-                                        packed=True,
+                                        packed=True, dims=dims,
                                         interpret=(impl == "pallas_interpret"))
     # fused reduction + epilogue: partials collapse and bias/act apply on
     # the fp32 sum inside the same program
@@ -115,8 +119,10 @@ def _ksplit_compute(x, wp, bias, *, bk, bn, splits, act, impl):
                   doc="k-split parallel partial sums + fused "
                       "reduction/epilogue")
 def skinny_ksplit(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
-                  packed: bool = True, impl=None, splits: int = 2):
+                  packed: bool = True, impl=None, schedule=None,
+                  splits: int = 2):
     impl = ops._resolve(impl)
+    sch = schedule or DEFAULT_SCHEDULE
     if not packed:
         w = packing.pack(w, bk, bn).blocks
     nk, nn, bk, bn = w.shape
@@ -125,7 +131,7 @@ def skinny_ksplit(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
     xp = ops.pad2(x, mp, nk * bk)
     s = split_divisor(nk, splits)
     out = _ksplit_compute(xp, w, _pad_bias(bias, nn * bn), bk=bk, bn=bn,
-                          splits=s, act=act, impl=impl)
+                          splits=s, act=act, impl=impl, dims=sch.dims)
     return out[:m]
 
 
@@ -134,8 +140,9 @@ def skinny_ksplit(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "bn", "act", "impl"))
-def _fused_pack_compute(x, w, bias, *, bk, bn, act, impl):
+@functools.partial(jax.jit,
+                   static_argnames=("bk", "bn", "act", "impl", "dims"))
+def _fused_pack_compute(x, w, bias, *, bk, bn, act, impl, dims=()):
     if impl == "xla":
         # blocked k contraction over the NATURAL layout — the same
         # blocked-einsum schedule the packed baseline times, minus its
@@ -151,6 +158,7 @@ def _fused_pack_compute(x, w, bias, *, bk, bn, act, impl):
             out = out + bias.astype(jnp.float32)[None, :]
         return _ref.act_ref(out, act).astype(x.dtype)
     return _k.tsmm_skinny_a_natural(x, w, bias, bk=bk, bn=bn, act=act,
+                                    dims=dims,
                                     interpret=(impl == "pallas_interpret"))
 
 
@@ -159,11 +167,13 @@ def _fused_pack_compute(x, w, bias, *, bk, bn, act, impl):
                       "inside the kernel, no per-call pack pass "
                       "(prepack=False shapes)")
 def skinny_fused_pack(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
-                      packed: bool = False, impl=None):
+                      packed: bool = False, impl=None, schedule=None):
+    sch = schedule or DEFAULT_SCHEDULE
     if packed:
         # weight already block-major (packed at load): nothing to fuse —
         # honest fallback to the baseline packed kernel
-        return ops.tsmm_skinny(x, w, bias, act=act, impl=impl)
+        return ops.tsmm_skinny(x, w, bias, act=act, impl=impl,
+                               dims=sch.dims)
     impl = ops._resolve(impl)
     m, k = x.shape
     n = w.shape[1]
@@ -171,5 +181,5 @@ def skinny_fused_pack(x, w, bias=None, act=None, *, bk: int = 0, bn: int = 0,
     mp = _ceil_to(m, ops.sublane(x.dtype))
     out = _fused_pack_compute(ops.pad2(x, mp, kp), ops.pad2(w, kp, np_),
                               _pad_bias(bias, np_), bk=bk, bn=bn, act=act,
-                              impl=impl)
+                              impl=impl, dims=sch.dims)
     return out[:m]

@@ -1,14 +1,22 @@
-"""Tall-A regime kernel variants (DESIGN.md §10).
+"""Tall-A regime kernel variants (DESIGN.md §10, §11).
 
 Each registered function is one competing inner kernel for the tall-A
 orientation (A (M,K) tall x B (K,N) skinny).  Shared contract:
 
-    fn(a, b, *, bm, bk, packed, impl, **variant_params)
+    fn(a, b, bias=None, act=None, *, bm, bk, packed, impl, schedule,
+       **variant_params)
 
 ``a`` is the natural (M, K) operand when ``packed`` is False, or the
 block-major (nm, nk, bm, bk) pre-packed layout when True (the caller —
 ``core.tsmm.tsmm_dot`` or the evaluator — owns the pack, exactly as for
 the baseline, so pre-pack cost placement is identical across variants).
+``bias``/``act`` are FUSED into each variant's epilogue (the final k
+step's ``_done`` write, or the fp32 reduction inside the same jit program
+for the split variants) — the tall-A prefill path never pays a separate
+(M, N) epilogue round trip over HBM.  ``schedule`` is the plan's
+``ScheduleSpec`` (grid dimension semantics, M-partition factor,
+multibuffer depth); variants that cannot express a knob ignore it (the
+vmem model gates enumerated schedules to supporting variants).
 Returns (M, N) for natural inputs (padding sliced off) or (nm*bm, N) for
 packed inputs (caller slices rows, as with ``ops.tsmm_packed``).
 
@@ -25,9 +33,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import DEFAULT_SCHEDULE
 from repro.kernels import ops
+from repro.kernels import ref as _ref
 from repro.kernels import tsmm as _k
-from repro.kernels.ops import _ceil_to
+from repro.kernels.ops import _ceil_to, _pad_bias
 from repro.kernels.variants.spec import register_variant
 
 
@@ -58,18 +68,31 @@ def _pad_b_for_packed(ap, b):
     return ops.pad2(b, nk * bk, _ceil_to(b.shape[1], 128))
 
 
+def _fused_epilogue_f32(out, bias, act, dtype):
+    """Bias+activation on an fp32 result INSIDE the producing jit program
+    (the split variants' fused reduction epilogue): XLA fuses it into the
+    reduction's consumer, so no separate pass over the (M, N) output."""
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    return _ref.act_ref(out, act).astype(dtype)
+
+
 # ---------------------------------------------------------------------------
-# baseline — the PR-3 kernels, unchanged semantics
+# baseline — the PR-3 kernels, with the fused epilogue + grid schedule
 # ---------------------------------------------------------------------------
 
 
 @register_variant("baseline", "tall_a",
-                  doc="k-innermost VMEM-accumulate (the original kernel)")
-def tall_baseline(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
-                  impl=None):
+                  doc="k-innermost VMEM-accumulate (the original kernel), "
+                      "fused bias+activation epilogue")
+def tall_baseline(a, b, bias=None, act=None, *, bm: int = 0, bk: int = 0,
+                  packed: bool = False, impl=None, schedule=None):
+    sch = schedule or DEFAULT_SCHEDULE
     if packed:
-        return ops.tsmm_packed(a, b, impl=impl)
-    return ops.tsmm(a, b, bm=bm, bk=bk, impl=impl)
+        return ops.tsmm_packed(a, b, bias, act=act, impl=impl,
+                               dims=sch.dims, m_split=sch.m_split)
+    return ops.tsmm(a, b, bias, bm=bm, bk=bk, act=act, impl=impl,
+                    dims=sch.dims, m_split=sch.m_split)
 
 
 # ---------------------------------------------------------------------------
@@ -78,8 +101,9 @@ def tall_baseline(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bk", "splits", "packed", "impl"))
-def _ksplit_compute(a, b, *, bm, bk, splits, packed, impl):
+                   static_argnames=("bm", "bk", "splits", "act", "packed",
+                                    "impl", "dims"))
+def _ksplit_compute(a, b, bias, *, bm, bk, splits, act, packed, impl, dims):
     if impl == "xla":
         if packed:
             nm, nk, pbm, pbk = a.shape
@@ -98,29 +122,35 @@ def _ksplit_compute(a, b, *, bm, bk, splits, packed, impl):
                                preferred_element_type=jnp.float32)
     else:
         parts = _k.tsmm_tall_a_ksplit(a, b, bm=bm, bk=bk, splits=splits,
-                                      packed=packed,
+                                      packed=packed, dims=dims,
                                       interpret=(impl == "pallas_interpret"))
-    # fused reduction: the partial sums collapse inside the same program
-    return parts.sum(axis=0).astype(b.dtype)
+    # fused reduction + epilogue: the partial sums collapse and
+    # bias/activation apply to the fp32 sum inside the same program
+    return _fused_epilogue_f32(parts.sum(axis=0), bias, act, b.dtype)
 
 
 @register_variant("ksplit", "tall_a", param_grid={"splits": (2, 4)},
-                  doc="k-split parallel partial sums + fused reduction")
-def tall_ksplit(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
-                impl=None, splits: int = 2):
+                  doc="k-split parallel partial sums + fused "
+                      "reduction/epilogue")
+def tall_ksplit(a, b, bias=None, act=None, *, bm: int = 0, bk: int = 0,
+                packed: bool = False, impl=None, schedule=None,
+                splits: int = 2):
     impl = ops._resolve(impl)
+    sch = schedule or DEFAULT_SCHEDULE
     n = b.shape[1]
     if packed:
         nm, nk, bm, bk = a.shape
         bp = _pad_b_for_packed(a, b)
         s = split_divisor(nk, splits)
-        return _ksplit_compute(a, bp, bm=bm, bk=bk, splits=s, packed=True,
-                               impl=impl)[:, :n]
+        return _ksplit_compute(a, bp, _pad_bias(bias, bp.shape[1]), bm=bm,
+                               bk=bk, splits=s, act=act, packed=True,
+                               impl=impl, dims=sch.dims)[:, :n]
     m = a.shape[0]
     ap, bp, bm_ = _pad_natural(a, b, bm, bk)
     s = split_divisor(ap.shape[1] // bk, splits)
-    return _ksplit_compute(ap, bp, bm=bm_, bk=bk, splits=s, packed=False,
-                           impl=impl)[:m, :n]
+    return _ksplit_compute(ap, bp, _pad_bias(bias, bp.shape[1]), bm=bm_,
+                           bk=bk, splits=s, act=act, packed=False,
+                           impl=impl, dims=sch.dims)[:m, :n]
 
 
 # ---------------------------------------------------------------------------
@@ -128,32 +158,42 @@ def tall_ksplit(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "packed", "impl"))
-def _kmajor_compute(a, b, *, bm, bk, packed, impl):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "act", "packed", "impl",
+                                    "dims"))
+def _kmajor_compute(a, b, bias, *, bm, bk, act, packed, impl, dims):
     if impl == "xla":
         # same math; the schedule difference is a Pallas/TPU property
         if packed:
-            return ops._xla_packed_a(a, b)
-        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(b.dtype)
-    out = _k.tsmm_tall_a_kmajor(a, b, bm=bm, bk=bk, packed=packed,
-                                interpret=(impl == "pallas_interpret"))
-    return out.astype(b.dtype)
+            return ops._xla_packed_a(a, b, bias, act)
+        out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    else:
+        out = _k.tsmm_tall_a_kmajor(a, b, bm=bm, bk=bk, packed=packed,
+                                    dims=dims,
+                                    interpret=(impl == "pallas_interpret"))
+    # the epilogue rides the final cast pass over the fp32 accumulator
+    # (already charged by the cost model's kmajor output-revisit terms)
+    return _fused_epilogue_f32(out, bias, act, b.dtype)
 
 
 @register_variant("kmajor", "tall_a",
                   doc="k-outermost loop order (B fetched once per k step, "
                       "fp32 output revisited in HBM)")
-def tall_kmajor(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
-                impl=None):
+def tall_kmajor(a, b, bias=None, act=None, *, bm: int = 0, bk: int = 0,
+                packed: bool = False, impl=None, schedule=None):
     impl = ops._resolve(impl)
+    sch = schedule or DEFAULT_SCHEDULE
     n = b.shape[1]
     if packed:
-        return _kmajor_compute(a, _pad_b_for_packed(a, b), bm=0, bk=0,
-                               packed=True, impl=impl)[:, :n]
+        bp = _pad_b_for_packed(a, b)
+        return _kmajor_compute(a, bp, _pad_bias(bias, bp.shape[1]), bm=0,
+                               bk=0, act=act, packed=True, impl=impl,
+                               dims=sch.dims)[:, :n]
     m = a.shape[0]
     ap, bp, bm_ = _pad_natural(a, b, bm, bk)
-    return _kmajor_compute(ap, bp, bm=bm_, bk=bk, packed=False,
-                           impl=impl)[:m, :n]
+    return _kmajor_compute(ap, bp, _pad_bias(bias, bp.shape[1]), bm=bm_,
+                           bk=bk, act=act, packed=False, impl=impl,
+                           dims=sch.dims)[:m, :n]
 
 
 # ---------------------------------------------------------------------------
@@ -161,27 +201,35 @@ def tall_kmajor(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "packed", "impl"))
-def _bres_compute(a, b, *, bm, bk, packed, impl):
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "act", "packed", "impl",
+                                    "dims", "m_split"))
+def _bres_compute(a, b, bias, *, bm, bk, act, packed, impl, dims, m_split):
     if impl == "xla":
         if packed:
-            return ops._xla_packed_a(a, b)
-        return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(b.dtype)
-    return _k.tsmm_tall_a_bres(a, b, bm=bm, bk=bk, packed=packed,
+            return ops._xla_packed_a(a, b, bias, act)
+        out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        return _fused_epilogue_f32(out, bias, act, b.dtype)
+    return _k.tsmm_tall_a_bres(a, b, bias, bm=bm, bk=bk, act=act,
+                               packed=packed, dims=dims, m_split=m_split,
                                interpret=(impl == "pallas_interpret"))
 
 
 @register_variant("b_resident", "tall_a",
                   doc="whole B (K, N) held in VMEM; k panels dynamic-sliced "
                       "(no per-row-panel B reload traffic)")
-def tall_b_resident(a, b, *, bm: int = 0, bk: int = 0, packed: bool = False,
-                    impl=None):
+def tall_b_resident(a, b, bias=None, act=None, *, bm: int = 0, bk: int = 0,
+                    packed: bool = False, impl=None, schedule=None):
     impl = ops._resolve(impl)
+    sch = schedule or DEFAULT_SCHEDULE
     n = b.shape[1]
     if packed:
-        return _bres_compute(a, _pad_b_for_packed(a, b), bm=0, bk=0,
-                             packed=True, impl=impl)[:, :n]
+        bp = _pad_b_for_packed(a, b)
+        return _bres_compute(a, bp, _pad_bias(bias, bp.shape[1]), bm=0, bk=0,
+                             act=act, packed=True, impl=impl, dims=sch.dims,
+                             m_split=sch.m_split)[:, :n]
     m = a.shape[0]
     ap, bp, bm_ = _pad_natural(a, b, bm, bk)
-    return _bres_compute(ap, bp, bm=bm_, bk=bk, packed=False,
-                         impl=impl)[:m, :n]
+    return _bres_compute(ap, bp, _pad_bias(bias, bp.shape[1]), bm=bm_, bk=bk,
+                         act=act, packed=False, impl=impl, dims=sch.dims,
+                         m_split=sch.m_split)[:m, :n]

@@ -124,6 +124,12 @@ def main():
             print("kernel variants in play: "
                   + ", ".join(f"{k} x{v}"
                               for k, v in sorted(counts.items())))
+        sr = eng.schedule_report()
+        if sr:
+            counts = Counter(sr.values())
+            print("grid schedules in play: "
+                  + ", ".join(f"{k} x{v}"
+                              for k, v in sorted(counts.items())))
         if eng.tuner is not None:
             eng.tuner.join(timeout=300)
             print(f"background tuner committed {len(eng.tuner.committed)} "

@@ -276,6 +276,26 @@ class Engine:
                              if model.prefill_row is not None else None)
         self._drain_misses()
 
+    def _stamp_report(self, field: int) -> dict:
+        """Walk every PackedTensor's ``kernel_specs`` stamp and map
+        ``m{bucket}_k{k}_n{n}`` -> the stamped entry's ``field`` (1 =
+        KernelSpec, 2 = ScheduleSpec).  Entries stamped before the
+        schedule axis existed are (bucket, spec) pairs — their schedule
+        reads as the default."""
+        from repro.core.packing import PackedTensor
+        from repro.core.plan import DEFAULT_SCHEDULE
+        out = {}
+        leaves = jax.tree.leaves(
+            self.params, is_leaf=lambda x: isinstance(x, PackedTensor))
+        for leaf in leaves:
+            if not isinstance(leaf, PackedTensor):
+                continue
+            k, n = leaf.shape[-2:]
+            for entry in leaf.kernel_specs:
+                val = entry[field] if len(entry) > field else DEFAULT_SCHEDULE
+                out[f"m{entry[0]}_k{k}_n{n}"] = val.key()
+        return out
+
     def variant_report(self) -> dict:
         """Which kernel variant each packed weight will replay per batch
         bucket — read off the ``kernel_specs`` stamp ``prepack_for`` left
@@ -284,17 +304,14 @@ class Engine:
         Keys are ``m{bucket}_k{k}_n{n}`` strings, values
         ``KernelSpec.key()``; unstamped/uncovered buckets are absent
         (they serve the baseline)."""
-        from repro.core.packing import PackedTensor
-        out = {}
-        leaves = jax.tree.leaves(
-            self.params, is_leaf=lambda x: isinstance(x, PackedTensor))
-        for leaf in leaves:
-            if not isinstance(leaf, PackedTensor):
-                continue
-            k, n = leaf.shape[-2:]
-            for bucket, spec in leaf.kernel_specs:
-                out[f"m{bucket}_k{k}_n{n}"] = spec.key()
-        return out
+        return self._stamp_report(1)
+
+    def schedule_report(self) -> dict:
+        """Schedule-axis sibling of :func:`variant_report` (DESIGN.md
+        §11): which grid schedule each packed weight replays per bucket
+        (``ScheduleSpec.key()`` values; ``default`` = the pre-schedule
+        behavior)."""
+        return self._stamp_report(2)
 
     # -- background tuning (runtime miss path, DESIGN.md §9) ------------
 
@@ -363,7 +380,8 @@ class Engine:
         cold_p = pkey not in self._warm_programs
         cold_d = dkey not in self._warm_programs
         compile_s = 0.0
-        with sharding_ctx(self.mesh, self.opts):
+        from repro.core.linear import serving_ctx
+        with serving_ctx(), sharding_ctx(self.mesh, self.opts):
             cache = self.model.init_cache(bucket, self.max_len)
             t0 = time.perf_counter()
             logits, cache = jax.block_until_ready(

@@ -201,7 +201,8 @@ class ContinuousScheduler:
         free = list(range(B))
         feed = np.zeros((B,), np.int32)       # next token fed per row
 
-        with sharding_ctx(eng.mesh, eng.opts):
+        from repro.core.linear import serving_ctx
+        with serving_ctx(), sharding_ctx(eng.mesh, eng.opts):
             while pending or active:
                 # -- admission: fill free slots from the queue ----------
                 while free and pending and T < max_len:

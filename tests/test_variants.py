@@ -16,7 +16,7 @@ import pytest
 
 from repro.core import evaluator, registry
 from repro.core.autotuner import candidate_blocks
-from repro.core.plan import Plan, Problem
+from repro.core.plan import DEFAULT_SCHEDULE, Plan, Problem
 from repro.core.vmem_model import contraction_steps, feasible, predict
 from repro.kernels import ops, ref
 from repro.kernels import variants
@@ -410,7 +410,8 @@ def test_prepacked_weight_replays_stamped_variant(cache_env, monkeypatch):
     w = _mk((512, 2048), jnp.float32)
     pk = prepack_for(4, w)
     assert pk is not None
-    assert pk.kernel_specs == ((4, KernelSpec.make("ksplit", splits=2)),)
+    assert pk.kernel_specs == ((4, KernelSpec.make("ksplit", splits=2),
+                                DEFAULT_SCHEDULE),)
     seen = []
     orig = variants.run_skinny_a
 
@@ -437,9 +438,11 @@ def test_stamp_regates_variant_at_packed_blocks(cache_env):
     ksp4 = predict(Plan(prob, "skinny_a", bm=4, bk=128, bn=256, impl="xla",
                         kernel=KernelSpec.make("ksplit", splits=4)))
     # feasible at the tuned blocks (nk=4)...
-    assert _stamp_spec_for_blocks(ksp4, 128, 256) == ksp4.kernel
+    assert _stamp_spec_for_blocks(ksp4, 128, 256) == (ksp4.kernel,
+                                                      DEFAULT_SCHEDULE)
     # ...but not at bk=512 (nk=1, 4 does not divide it)
-    assert _stamp_spec_for_blocks(ksp4, 512, 256) == BASELINE
+    assert _stamp_spec_for_blocks(ksp4, 512, 256) == (BASELINE,
+                                                      DEFAULT_SCHEDULE)
     # a fused_pack (prepack=False-only) winner cannot replay on a packed
     # weight: prepack_for stamps the baseline, matching what serves
     fused = predict(Plan(prob, "skinny_a", bm=4, bk=128, bn=256,
@@ -448,7 +451,8 @@ def test_stamp_regates_variant_at_packed_blocks(cache_env):
     registry.put(dataclasses.replace(fused, chosen_by="measured"),
                  persist=False)
     pk = prepack_for(4, _mk((512, 2048), jnp.float32))
-    assert pk is not None and pk.kernel_specs == ((4, BASELINE),)
+    assert pk is not None and pk.kernel_specs == ((4, BASELINE,
+                                                   DEFAULT_SCHEDULE),)
 
 
 def test_fused_pack_on_packed_weight_falls_back(cache_env):
