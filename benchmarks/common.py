@@ -34,3 +34,27 @@ def emit(rows, header=("name", "us_per_call", "derived")):
     for r in rows:
         print(",".join(str(x) for x in r))
     return rows
+
+
+def write_bench_json(path, bench_id, report, failed=0):
+    """Write benchmark sections in the BENCH_*.json schema ``run.py``
+    established (PR 5): ``{"bench", "failed_sections", "sections":
+    [{"section", "rows": [{"name", "us_per_call", "derived"}]}]}`` —
+    one schema for every artifact so the perf trajectory stays
+    machine-comparable across PRs.  ``report``: [(section, rows)]."""
+    import json
+    blob = {
+        "bench": bench_id,
+        "failed_sections": failed,
+        "sections": [
+            {"section": name,
+             "rows": [{"name": r[0], "us_per_call": r[1],
+                       "derived": str(r[2]) if len(r) > 2 else ""}
+                      for r in rows]}
+            for name, rows in report
+        ],
+    }
+    out = Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(blob, indent=1))
+    return out

@@ -13,7 +13,6 @@ section summarizes dry-run artifacts when present (run
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import traceback
 from pathlib import Path
@@ -45,13 +44,18 @@ def main(argv=None) -> None:
 
     from benchmarks import (cache_complexity, epilogue_fusion,
                             inner_kernel_select, packing_fraction,
-                            prepack_vs_conventional)
+                            prepack_vs_conventional, serving_slo)
     sections = [
         ("fig5_packing_fraction", packing_fraction.run),
         ("fig6_7_prepack_vs_conventional", prepack_vs_conventional.run),
         ("fig8_inner_kernel_selection", inner_kernel_select.run),
         ("eq4_6_cache_complexity", cache_complexity.run),
         ("sec11_epilogue_fusion", epilogue_fusion.run),
+        # smoke-scale open-loop SLO scoreboard (virtual clock, so these
+        # rows are deterministic; the full table is BENCH_6.json from
+        # `python -m benchmarks.serving_slo --json`)
+        ("sec12_serving_slo", lambda: serving_slo.run(
+            n_requests=16, max_batch=2, prepack=False)),
     ]
     failed = 0
     report = []
@@ -82,21 +86,9 @@ def main(argv=None) -> None:
         traceback.print_exc()
 
     if args.json:
-        blob = {
-            "bench": "BENCH_5",
-            "failed_sections": failed,
-            "sections": [
-                {"section": name,
-                 "rows": [{"name": r[0], "us_per_call": r[1],
-                           "derived": str(r[2]) if len(r) > 2 else ""}
-                          for r in rows]}
-                for name, rows in report
-            ],
-        }
-        out = Path(args.json)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(blob, indent=1))
-        print(f"\nwrote {sum(len(s['rows']) for s in blob['sections'])} rows "
+        from benchmarks.common import write_bench_json
+        out = write_bench_json(args.json, "BENCH_5", report, failed=failed)
+        print(f"\nwrote {sum(len(rows) for _, rows in report)} rows "
               f"-> {out}")
     if failed:
         sys.exit(1)

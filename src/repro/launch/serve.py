@@ -18,6 +18,16 @@ telemetry (padding waste, queue latency, slot occupancy):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_4b --reduced \
         --trace 2:9,3:30,1:5 --max-batch 4 --steps 8
+
+Open-loop async front end (DESIGN.md §12) — the same trace becomes a
+seeded Poisson arrival process at ``--rate`` requests/s, served through
+the SLO-aware ``AsyncEngine`` (priority tiers, tenant fairness,
+bounded-queue backpressure, chunk-budgeted prefill) on the
+deterministic virtual clock; prints the p50/p95/p99 TTFT scoreboard and
+per-tier telemetry:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_4b --reduced \
+        --trace 2:9,3:30,1:5 --max-batch 4 --steps 8 --async --rate 50
 """
 
 from __future__ import annotations
@@ -86,6 +96,17 @@ def main():
                     help="on registry miss, serve off the calibrated-model "
                          "plan and wall-clock + commit the measured winner "
                          "on a background thread (DESIGN.md §9)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="open-loop SLO-aware front end (DESIGN.md §12): "
+                         "requests arrive as a Poisson process at --rate "
+                         "on the deterministic virtual clock")
+    ap.add_argument("--rate", type=float, default=25.0,
+                    help="offered load for --async, requests/s")
+    ap.add_argument("--queue-limit", type=int, default=64,
+                    help="--async admission-control bound (backpressure)")
+    ap.add_argument("--prefill-budget", type=int, default=32,
+                    help="--async prompt tokens admissible per decode step "
+                         "(0 = unbounded)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -99,7 +120,7 @@ def main():
     max_batch = args.max_batch or max(b for b, _ in trace)
     max_prompt = max(p for _, p in trace)
     ragged = args.queue or len({p for _, p in trace}) > 1
-    if ragged:
+    if args.async_mode or ragged:
         # global-clock capacity: base length bucket + every decode step
         total_steps = sum(b * args.steps for b, _ in trace)
         max_len = args.max_len or (2 * max_prompt + total_steps + 8)
@@ -135,6 +156,44 @@ def main():
             print(f"background tuner committed {len(eng.tuner.committed)} "
                   f"measured plans "
                   f"({len(registry.measurements())} cached measurements)")
+
+    if args.async_mode:
+        from repro.serve.clock import VirtualClock
+        from repro.serve.frontend import AsyncEngine
+
+        rng = np.random.default_rng(0)
+        reqs = []
+        arrival = 0.0
+        for i, (b, p) in enumerate(trace):
+            for j in range(b):
+                arrival += float(rng.exponential(1.0 / args.rate))
+                reqs.append(Request(
+                    tokens=rng.integers(0, cfg.vocab_size, size=p),
+                    max_new_tokens=args.steps, rid=f"g{i}r{j}",
+                    arrival_time=arrival, priority=i % 3,
+                    tenant=f"tenant{j % 2}"))
+        afe = AsyncEngine(eng, queue_limit=args.queue_limit,
+                          prefill_budget=args.prefill_budget or None,
+                          clock=VirtualClock())
+        streams, stats = afe.simulate(reqs)
+        for s in streams:
+            state = ("REJECTED" if s.rejected
+                     else "ok" if s.completed else "truncated")
+            ttft = f"{s.ttft * 1e3:7.2f}ms" if s.ttft is not None else "      -"
+            print(f"req {str(s.rid):8s} tier={s.priority} "
+                  f"tenant={s.tenant:8s} arrive={s.arrival_time:7.3f}s "
+                  f"ttft={ttft} tokens={len(s.tokens):3d} {state}")
+        ttfts = np.asarray([s.ttft for s in streams if s.ttft is not None])
+        if ttfts.size:
+            print(f"-- offered load {args.rate:g} req/s (virtual clock) --")
+            print(f"  ttft p50/p95/p99: {np.percentile(ttfts, 50)*1e3:.2f} / "
+                  f"{np.percentile(ttfts, 95)*1e3:.2f} / "
+                  f"{np.percentile(ttfts, 99)*1e3:.2f} ms")
+        print("-- scheduler telemetry --")
+        for k, v in stats.rows():
+            print(f"  {k:20s} {v}")
+        epilogue()
+        return
 
     if ragged:
         rng = np.random.default_rng(0)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core.plan import BucketGrid, Problem, bucket_for, buckets_for, \
     length_buckets_for
 from repro.core.tsmm import prepack_for
+from repro.serve.clock import StepCost, ensure_clock
 from repro.models.param import is_axes_leaf
 from repro.sharding.context import sharding_ctx
 from repro.sharding.rules import ShardingOptions, axis_size, pspec_for
@@ -215,12 +216,18 @@ class Engine:
                  max_prompt: Optional[int] = None, min_prompt: int = 8,
                  mesh=None, opts: Optional[ShardingOptions] = None,
                  prepack: bool = True, background_tune: bool = False,
-                 tuner_opts: Optional[dict] = None):
+                 tuner_opts: Optional[dict] = None,
+                 clock=None, step_cost: Optional[StepCost] = None):
         if max_batch is None:
             max_batch = batch_size
         self.model = model
         self.mesh = mesh
         self.opts = opts or ShardingOptions()
+        # clock seam (DESIGN.md §12): every serving-path time read goes
+        # through here; a VirtualClock makes telemetry deterministic (the
+        # engine/scheduler charge step_cost instead of measuring)
+        self.clock = ensure_clock(clock)
+        self.step_cost = step_cost or StepCost()
         # programs (keyed by kind + shape) this engine has already run
         # once — the scheduler uses it to split first-invocation jit time
         # out of its throughput telemetry (SchedulerStats.compile_s)
@@ -368,7 +375,7 @@ class Engine:
         )
 
     def _generate_bucket(self, batch: dict, steps: int) -> GenerateResult:
-        import time
+        clock = self.clock
         b = batch["tokens"].shape[0]
         bucket = self.bucket_of(b)
         batch = self._pad_group(batch, b, bucket)
@@ -383,10 +390,15 @@ class Engine:
         from repro.core.linear import serving_ctx
         with serving_ctx(), sharding_ctx(self.mesh, self.opts):
             cache = self.model.init_cache(bucket, self.max_len)
-            t0 = time.perf_counter()
+            t0 = clock.now()
             logits, cache = jax.block_until_ready(
                 self._prefill(self.params, batch, cache))
-            t1 = time.perf_counter()
+            if clock.virtual:
+                if cold_p:
+                    clock.advance(self.step_cost.compile_s)
+                clock.advance(self.step_cost.prefill_s(
+                    bucket * batch["tokens"].shape[-1]))
+            t1 = clock.now()
             if cold_p:
                 compile_s += t1 - t0
                 self._warm_programs.add(pkey)
@@ -395,16 +407,20 @@ class Engine:
             for i in range(steps):
                 toks.append(tok)
                 if i == 0 and cold_d:
-                    td = time.perf_counter()
+                    td = clock.now()
                     logits, cache = self._decode(self.params, cache, tok)
                     jax.block_until_ready(logits)
-                    compile_s += time.perf_counter() - td
+                    if clock.virtual:
+                        clock.advance(self.step_cost.compile_s)
+                    compile_s += clock.now() - td
                     self._warm_programs.add(dkey)
                 else:
                     logits, cache = self._decode(self.params, cache, tok)
+                if clock.virtual:
+                    clock.advance(self.step_cost.decode_step_s)
                 tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
             jax.block_until_ready(tok)
-            t2 = time.perf_counter()
+            t2 = clock.now()
         self._drain_misses()
         return GenerateResult(
             tokens=jnp.concatenate(toks, axis=1)[:b],

@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler (DESIGN.md §8).
+"""Continuous-batching scheduler (DESIGN.md §8, §12).
 
 The bucketed Engine (§7) serves one aligned group at a time: a stream
 that finishes early holds its slot until the whole group drains, and a
@@ -23,13 +23,25 @@ alone at position 0; ``valid_from[row]`` masks the left-pad region and
 whatever a previous stream left in the recycled slot.  The clock never
 rewinds, so cache capacity ``max_len`` bounds prompt bucket + total
 decode steps — size ``Engine(max_len=...)`` accordingly.
+
+Since §12 the scheduler is a *step-driven core*, not just a monolithic
+``run()``: ``open()`` allocates the slot-pool state, ``admit()``
+prefills one request into a free row, ``step()`` executes one lockstep
+decode, ``close()`` finalizes telemetry.  ``run()`` (the closed-loop
+drain ``Engine.serve_queue`` uses) and the open-loop
+:class:`repro.serve.frontend.AsyncEngine` both drive these SAME
+methods, so front-end output is byte-identical to ``serve_queue`` by
+construction.  All wall-time reads go through the engine's
+:class:`~repro.serve.clock.Clock`; on a virtual clock each operation
+charges its :class:`~repro.serve.clock.StepCost` instead, making every
+latency number deterministic.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
-import time
 from collections import deque
 from typing import List, Optional
 
@@ -37,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.clock import StepCost, ensure_clock
 from repro.sharding.context import sharding_ctx
 
 log = logging.getLogger(__name__)
@@ -44,11 +57,46 @@ log = logging.getLogger(__name__)
 
 @dataclasses.dataclass
 class Request:
-    """One queued generation request (ragged: any prompt length)."""
+    """One queued generation request (ragged: any prompt length).
+
+    ``arrival_time`` / ``priority`` / ``tenant`` exist for the open-loop
+    front end (DESIGN.md §12) and default to values that reproduce the
+    old closed-loop behavior — every pre-§12 callsite and serialized
+    trace keeps working unchanged (the back-compat contract
+    ``tests/test_serving_frontend.py`` pins).
+    """
     tokens: object                      # 1D int prompt
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     rid: Optional[object] = None
+    arrival_time: float = 0.0           # clock seconds (open-loop traces)
+    priority: int = 0                   # 0 = most urgent tier
+    tenant: str = "default"             # fairness domain within a tier
+
+    def to_json(self) -> dict:
+        return {
+            "tokens": [int(t) for t in np.asarray(self.tokens).reshape(-1)],
+            "max_new_tokens": self.max_new_tokens,
+            "eos_id": self.eos_id,
+            "rid": self.rid,
+            "arrival_time": self.arrival_time,
+            "priority": self.priority,
+            "tenant": self.tenant,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "Request":
+        """Load a serialized request; pre-§12 records (no arrival /
+        priority / tenant fields) get the defaults."""
+        return Request(
+            tokens=np.asarray(d["tokens"], np.int32),
+            max_new_tokens=int(d.get("max_new_tokens", 16)),
+            eos_id=d.get("eos_id"),
+            rid=d.get("rid"),
+            arrival_time=float(d.get("arrival_time", 0.0)),
+            priority=int(d.get("priority", 0)),
+            tenant=str(d.get("tenant", "default")),
+        )
 
 
 @dataclasses.dataclass
@@ -64,6 +112,32 @@ class StreamResult:
 
 
 @dataclasses.dataclass
+class TierStats:
+    """Per-priority-tier serving telemetry (DESIGN.md §12)."""
+    admitted: int = 0
+    completed: int = 0
+    rejected: int = 0                   # bounced by admission control
+    generated_tokens: int = 0
+    queue_steps_total: int = 0
+    ttft_total_s: float = 0.0           # arrival -> first token (stamped
+    ttft_max_s: float = 0.0             # only by the open-loop front end)
+    ttft_count: int = 0
+
+    @property
+    def mean_queue_steps(self) -> float:
+        return self.queue_steps_total / max(self.admitted, 1)
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return self.ttft_total_s / max(self.ttft_count, 1)
+
+    def note_ttft(self, ttft_s: float) -> None:
+        self.ttft_total_s += ttft_s
+        self.ttft_max_s = max(self.ttft_max_s, ttft_s)
+        self.ttft_count += 1
+
+
+@dataclasses.dataclass
 class SchedulerStats:
     """Telemetry for one ``run`` (surfaced by ``launch/serve.py --trace``)."""
     slots: int
@@ -71,6 +145,7 @@ class SchedulerStats:
     admitted: int = 0
     completed: int = 0
     unserved: int = 0                   # ran out of cache capacity
+    rejected: int = 0                   # admission control (queue bound)
     prompt_tokens: int = 0              # real prompt tokens prefilled
     prompt_pad_tokens: int = 0          # left-pad tokens prefilled
     generated_tokens: int = 0
@@ -81,6 +156,14 @@ class SchedulerStats:
     # per-(batch, length-bucket) programs, split OUT of the throughput
     # telemetry: a cold run used to report compile time as token time
     compile_s: float = 0.0
+    # per-priority-tier telemetry (populated when requests carry tiers)
+    tiers: dict = dataclasses.field(default_factory=dict)
+
+    def tier(self, priority: int) -> TierStats:
+        ts = self.tiers.get(priority)
+        if ts is None:
+            ts = self.tiers[priority] = TierStats()
+        return ts
 
     @property
     def occupancy(self) -> float:
@@ -111,12 +194,13 @@ class SchedulerStats:
         return self.generated_tokens / max(self.wall_s, 1e-9)
 
     def rows(self) -> list:
-        return [
+        out = [
             ("slots", self.slots),
             ("decode_steps", self.steps),
             ("admitted", self.admitted),
             ("completed", self.completed),
             ("unserved", self.unserved),
+            ("rejected", self.rejected),
             ("generated_tokens", self.generated_tokens),
             ("prompt_tokens", self.prompt_tokens),
             ("prompt_pad_tokens", self.prompt_pad_tokens),
@@ -127,22 +211,108 @@ class SchedulerStats:
             ("compile_s", f"{self.compile_s:.3f}"),
             ("tokens_per_s", f"{self.tokens_per_s:.1f}"),
         ]
+        for prio in sorted(self.tiers):
+            t = self.tiers[prio]
+            out.append((
+                f"tier{prio}",
+                f"adm={t.admitted} done={t.completed} rej={t.rejected} "
+                f"wait={t.mean_queue_steps:.2f}steps "
+                f"ttft_mean={t.mean_ttft_s * 1e3:.2f}ms "
+                f"ttft_max={t.ttft_max_s * 1e3:.2f}ms"))
+        return out
 
 
 class ContinuousScheduler:
-    """Slot-pool scheduler over a bucketed :class:`~repro.serve.engine.Engine`."""
+    """Slot-pool scheduler over a bucketed :class:`~repro.serve.engine.Engine`.
 
-    def __init__(self, engine, *, slots: Optional[int] = None):
+    Step-driven API (§12): ``open(base_clock)`` → interleave ``admit()``
+    / ``step()`` → ``close()``.  ``admit``/``step`` return
+    ``(emitted, finished)`` event lists — ``emitted`` is ``(stream_state,
+    token, t)`` per generated token (``t`` = clock seconds, the front
+    end's streaming/TTFT stamp), ``finished`` is ``(tag, StreamResult)``
+    where ``tag`` is whatever the caller passed to ``admit`` (the
+    closed-loop ``run`` passes the request's queue index; the front end
+    passes its TokenStream handle).
+    """
+
+    def __init__(self, engine, *, slots: Optional[int] = None,
+                 clock=None, step_cost: Optional[StepCost] = None):
         if not engine.ragged_supported():
             raise ValueError(
                 "continuous batching needs an attention-cache LM "
                 f"(family={engine.model.cfg.family}, "
                 f"sliding_window={engine.model.cfg.sliding_window})")
         self.engine = engine
+        self.clock = ensure_clock(clock if clock is not None
+                                  else getattr(engine, "clock", None))
+        self.step_cost = (step_cost if step_cost is not None
+                          else getattr(engine, "step_cost", None)) or StepCost()
         want = slots or engine.max_batch
         # snap to a batch bucket: the decode program for that batch size
         # is the one the install sweep planned and pre-pack conforms to
         self.slots = engine.bucket_of(min(want, engine.max_batch))
+        self.stats: Optional[SchedulerStats] = None
+        self.active: dict = {}
+        self.free: list = []
+        self._opened = False
+
+    # -- request validation ---------------------------------------------
+
+    def prepare(self, r: Request):
+        """Validate one request: returns ``(tokens, length_bucket)`` or
+        raises (prompt over the grid ceiling)."""
+        toks = np.asarray(r.tokens, np.int32).reshape(-1)
+        lb = self.engine.grid.length_bucket(toks.shape[0])
+        return toks, lb
+
+    # -- lifecycle ------------------------------------------------------
+
+    def open(self, base_clock: int) -> None:
+        """Allocate the shared cache / slot-pool state at clock position
+        ``base_clock`` (every later admission's length bucket must fit
+        below it)."""
+        eng = self.engine
+        if base_clock >= eng.max_len:
+            raise ValueError(
+                f"length bucket {base_clock} leaves no decode room in "
+                f"max_len={eng.max_len}; raise Engine(max_len=...)")
+        if self._opened:
+            raise RuntimeError("scheduler already open")
+        B = self.slots
+        self.stats = SchedulerStats(slots=B)
+        self.T = base_clock
+        self._t_open = self.clock.now()
+        cache = eng.model.init_cache(B, eng.max_len)
+        cache = dict(cache)
+        cache["pos"] = jnp.asarray(self.T, jnp.int32)
+        # idle rows attend to nothing until a stream is admitted
+        cache["valid_from"] = jnp.full((B,), eng.max_len, jnp.int32)
+        self.cache = cache
+        self.active = {}
+        self.free = list(range(B))
+        self.feed = np.zeros((B,), np.int32)  # next token fed per row
+        from repro.core.linear import serving_ctx
+        self._stack = contextlib.ExitStack()
+        self._stack.enter_context(serving_ctx())
+        self._stack.enter_context(sharding_ctx(eng.mesh, eng.opts))
+        self._opened = True
+
+    def close(self) -> SchedulerStats:
+        """Exit serving contexts and finalize ``stats.wall_s``."""
+        if self._opened:
+            self._stack.close()
+            self.stats.wall_s = self.clock.now() - self._t_open
+            self._opened = False
+        return self.stats
+
+    # -- state queries --------------------------------------------------
+
+    def can_admit(self) -> bool:
+        return bool(self.free) and self.T < self.engine.max_len
+
+    def exhausted(self) -> bool:
+        """Cache capacity spent: no decode (or admission) room left."""
+        return self.T >= self.engine.max_len
 
     # -- internals ------------------------------------------------------
 
@@ -151,129 +321,167 @@ class ContinuousScheduler:
         return (len(em) >= r.max_new_tokens
                 or (r.eos_id is not None and em and em[-1] == r.eos_id))
 
-    def _retire(self, st, results, free, active, clock, stats, *,
-                completed=True):
+    def _retire(self, st, *, completed=True) -> StreamResult:
         row = st["row"]
-        results[st["idx"]] = StreamResult(
-            rid=st["req"].rid if st["req"].rid is not None else st["idx"],
+        res = StreamResult(
+            rid=st["req"].rid if st["req"].rid is not None else st["tag"],
             tokens=np.asarray(st["emitted"], np.int32),
             prompt_len=st["prompt_len"], length_bucket=st["lb"],
-            admitted_at=st["admitted_at"], finished_at=clock,
+            admitted_at=st["admitted_at"], finished_at=self.T,
             queue_steps=st["queue_steps"], completed=completed)
-        del active[row]
-        free.append(row)
-        stats.completed += int(completed)
+        del self.active[row]
+        self.free.append(row)
+        self.stats.completed += int(completed)
+        self.stats.tier(st["req"].priority).completed += int(completed)
+        return res
 
-    # -- main loop ------------------------------------------------------
+    # -- the two scheduling operations ----------------------------------
+
+    def admit(self, req: Request, toks=None, lb=None, *, tag=None,
+              arrival: Optional[float] = None):
+        """Prefill one request into a free row of the LIVE batch.
+
+        Returns ``(emitted, finished)``: the first generated token (and,
+        for max_new_tokens==1 / instant-EOS streams, the finished
+        result).  ``arrival`` (clock seconds) stamps TTFT telemetry on
+        the request's tier — the open-loop front end passes it, the
+        closed-loop drain does not (arrival is meaningless there).
+        """
+        assert self._opened and self.free, "no free slot"
+        eng, stats, clock = self.engine, self.stats, self.clock
+        if toks is None or lb is None:
+            toks, lb = self.prepare(req)
+        row = self.free.pop()
+        p = toks.shape[0]
+        padded = np.zeros((lb,), np.int32)
+        padded[lb - p:] = toks
+        batch = {"tokens": jnp.asarray(padded)[None],
+                 "pad": jnp.asarray([lb - p], jnp.int32)}
+        # first use of this (slots, length-bucket) program: attribute its
+        # trace+compile time to compile_s, not to serving throughput
+        pkey = ("prefill_row", self.slots, lb)
+        cold = pkey not in eng._warm_programs
+        if cold:
+            tc0 = clock.now()
+        logits, self.cache = eng._prefill_row(
+            eng.params, batch, self.cache,
+            jnp.asarray(row, jnp.int32), jnp.asarray(self.T, jnp.int32))
+        if cold:
+            jax.block_until_ready(logits)
+            if clock.virtual:
+                clock.advance(self.step_cost.compile_s)
+            stats.compile_s += clock.now() - tc0
+            eng._warm_programs.add(pkey)
+        if clock.virtual:
+            clock.advance(self.step_cost.prefill_s(lb))
+        first = int(jnp.argmax(logits[0, -1]))
+        t_tok = clock.now()
+        st = {"tag": tag, "req": req, "row": row, "lb": lb,
+              "prompt_len": int(p), "emitted": [first],
+              "admitted_at": self.T, "queue_steps": stats.steps}
+        self.active[row] = st
+        self.feed[row] = first
+        stats.admitted += 1
+        stats.prompt_tokens += int(p)
+        stats.prompt_pad_tokens += lb - p
+        stats.queue_steps_total += st["queue_steps"]
+        stats.generated_tokens += 1
+        tier = stats.tier(req.priority)
+        tier.admitted += 1
+        tier.queue_steps_total += st["queue_steps"]
+        tier.generated_tokens += 1
+        if arrival is not None:
+            tier.note_ttft(t_tok - arrival)
+        emitted = [(st, first, t_tok)]
+        finished = []
+        if self._finished(st):           # max_new_tokens == 1 / EOS
+            finished.append((tag, self._retire(st)))
+        return emitted, finished
+
+    def step(self):
+        """One lockstep decode step over the whole pool.
+
+        Returns ``(emitted, finished)`` event lists (see class doc)."""
+        assert self._opened and self.active, "no live streams to step"
+        eng, stats, clock = self.engine, self.stats, self.clock
+        dkey = ("decode", self.slots, 1)
+        cold = dkey not in eng._warm_programs
+        if cold:
+            tc0 = clock.now()
+        logits, self.cache = eng._decode(eng.params, self.cache,
+                                         jnp.asarray(self.feed[:, None]))
+        if cold:
+            jax.block_until_ready(logits)
+            if clock.virtual:
+                clock.advance(self.step_cost.compile_s)
+            stats.compile_s += clock.now() - tc0
+            eng._warm_programs.add(dkey)
+        if clock.virtual:
+            clock.advance(self.step_cost.decode_step_s)
+        self.T += 1
+        stats.steps += 1
+        stats.slot_steps_active += len(self.active)
+        t_tok = clock.now()
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        emitted, finished = [], []
+        for row in list(self.active):
+            st = self.active[row]
+            st["emitted"].append(int(nxt[row]))
+            self.feed[row] = nxt[row]
+            stats.generated_tokens += 1
+            stats.tier(st["req"].priority).generated_tokens += 1
+            emitted.append((st, int(nxt[row]), t_tok))
+            if self._finished(st):
+                finished.append((st["tag"], self._retire(st)))
+        return emitted, finished
+
+    def truncate(self):
+        """Capacity ran out mid-flight: retire every live stream with
+        ``completed=False`` (the cache clock cannot rewind)."""
+        finished = []
+        for st in list(self.active.values()):
+            finished.append((st["tag"], self._retire(st, completed=False)))
+        return finished
+
+    # -- closed-loop drain (Engine.serve_queue) -------------------------
 
     def run(self, requests: List[Request]):
         """Serve the whole queue; returns (results, stats) with results in
         request order."""
         eng = self.engine
-        B, max_len = self.slots, eng.max_len
-        stats = SchedulerStats(slots=B)
         reqs = []
         for r in requests:
-            toks = np.asarray(r.tokens, np.int32).reshape(-1)
-            lb = eng.grid.length_bucket(toks.shape[0])   # raises if too long
+            toks, lb = self.prepare(r)   # raises if too long
             reqs.append((r, toks, lb))
         results: list = [None] * len(reqs)
         if not reqs:
-            return results, stats
+            return results, SchedulerStats(slots=self.slots)
 
         # base clock: the largest length bucket in the queue, so every
         # admission (at clock >= T0) has room for its prompt below it
-        T = max(lb for _, _, lb in reqs)
-        if T >= max_len:
-            raise ValueError(
-                f"length bucket {T} leaves no decode room in max_len="
-                f"{max_len}; raise Engine(max_len=...)")
-
-        t_wall = time.perf_counter()
-        cache = eng.model.init_cache(B, max_len)
-        cache = dict(cache)
-        cache["pos"] = jnp.asarray(T, jnp.int32)
-        # idle rows attend to nothing until a stream is admitted
-        cache["valid_from"] = jnp.full((B,), max_len, jnp.int32)
-
+        self.open(max(lb for _, _, lb in reqs))
+        stats = self.stats
         pending = deque(enumerate(reqs))
-        active: dict = {}
-        free = list(range(B))
-        feed = np.zeros((B,), np.int32)       # next token fed per row
-
-        from repro.core.linear import serving_ctx
-        with serving_ctx(), sharding_ctx(eng.mesh, eng.opts):
-            while pending or active:
+        try:
+            while pending or self.active:
                 # -- admission: fill free slots from the queue ----------
-                while free and pending and T < max_len:
+                while self.free and pending and not self.exhausted():
                     idx, (r, toks, lb) = pending.popleft()
-                    row = free.pop()
-                    p = toks.shape[0]
-                    padded = np.zeros((lb,), np.int32)
-                    padded[lb - p:] = toks
-                    batch = {"tokens": jnp.asarray(padded)[None],
-                             "pad": jnp.asarray([lb - p], jnp.int32)}
-                    # first use of this (slots, length-bucket) program:
-                    # attribute its trace+compile time to compile_s, not
-                    # to serving throughput
-                    pkey = ("prefill_row", B, lb)
-                    cold = pkey not in eng._warm_programs
-                    if cold:
-                        tc0 = time.perf_counter()
-                    logits, cache = eng._prefill_row(
-                        eng.params, batch, cache,
-                        jnp.asarray(row, jnp.int32), jnp.asarray(T, jnp.int32))
-                    if cold:
-                        jax.block_until_ready(logits)
-                        stats.compile_s += time.perf_counter() - tc0
-                        eng._warm_programs.add(pkey)
-                    first = int(jnp.argmax(logits[0, -1]))
-                    st = {"idx": idx, "req": r, "row": row, "lb": lb,
-                          "prompt_len": int(p), "emitted": [first],
-                          "admitted_at": T, "queue_steps": stats.steps}
-                    active[row] = st
-                    feed[row] = first
-                    stats.admitted += 1
-                    stats.prompt_tokens += int(p)
-                    stats.prompt_pad_tokens += lb - p
-                    stats.queue_steps_total += st["queue_steps"]
-                    stats.generated_tokens += 1
-                    if self._finished(st):       # max_new_tokens == 1 / EOS
-                        self._retire(st, results, free, active, T, stats)
-
-                if not active:
-                    break                        # queue empty or out of room
-
-                if T >= max_len:                 # cache full: truncate
-                    for st in list(active.values()):
-                        self._retire(st, results, free, active, T, stats,
-                                     completed=False)
+                    _, finished = self.admit(r, toks, lb, tag=idx)
+                    for tag, res in finished:
+                        results[tag] = res
+                if not self.active:
+                    break                # queue empty or out of room
+                if self.exhausted():     # cache full: truncate
+                    for tag, res in self.truncate():
+                        results[tag] = res
                     break
-
                 # -- one lockstep decode step over the whole pool -------
-                dkey = ("decode", B, 1)
-                cold = dkey not in eng._warm_programs
-                if cold:
-                    tc0 = time.perf_counter()
-                logits, cache = eng._decode(eng.params, cache,
-                                            jnp.asarray(feed[:, None]))
-                if cold:
-                    jax.block_until_ready(logits)
-                    stats.compile_s += time.perf_counter() - tc0
-                    eng._warm_programs.add(dkey)
-                T += 1
-                stats.steps += 1
-                stats.slot_steps_active += len(active)
-                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-                for row in list(active):
-                    st = active[row]
-                    st["emitted"].append(int(nxt[row]))
-                    feed[row] = nxt[row]
-                    stats.generated_tokens += 1
-                    if self._finished(st):
-                        self._retire(st, results, free, active, T, stats)
-
-        stats.wall_s = time.perf_counter() - t_wall
+                _, finished = self.step()
+                for tag, res in finished:
+                    results[tag] = res
+        finally:
+            self.close()
         # capacity ran out with requests still queued
         for idx, (r, toks, lb) in pending:
             stats.unserved += 1

@@ -87,11 +87,19 @@ class ShardCtx:
 
 @contextlib.contextmanager
 def sharding_ctx(mesh: Optional[Mesh], opts: Optional[ShardingOptions] = None):
+    prev = _CTX.get()
     tok = _CTX.set(ShardCtx(mesh, opts or ShardingOptions()) if mesh is not None else None)
     try:
         yield
     finally:
-        _CTX.reset(tok)
+        try:
+            _CTX.reset(tok)
+        except ValueError:
+            # entered and exited in different asyncio task contexts (the
+            # async front end may open the scheduler in a submitter's
+            # task and close it in the serve loop's); tokens don't cross
+            # task contexts, so restore the captured value directly
+            _CTX.set(prev)
 
 
 def get_ctx() -> Optional[ShardCtx]:

@@ -158,9 +158,15 @@ def test_scheduler_recycles_slots_and_matches_reference(f32_model):
     """The acceptance scenario: a queue of requests with DIFFERENT prompt
     lengths and decode budgets is served from a fixed slot pool; streams
     that finish early free their slot for queued requests (no group
-    drain), and every stream's tokens equal its solo greedy decode."""
+    drain), and every stream's tokens equal its solo greedy decode.
+
+    Runs on the VIRTUAL clock (DESIGN.md §12) so the timing telemetry —
+    wall_s, compile_s, tokens_per_s — is asserted EXACTLY instead of
+    being wall-clock noise we could only eyeball."""
+    from repro.serve.clock import StepCost, VirtualClock
     model, params, axes = f32_model
-    eng = Engine(model, params, axes, max_len=128, max_batch=2, prepack=False)
+    eng = Engine(model, params, axes, max_len=128, max_batch=2, prepack=False,
+                 clock=VirtualClock())
     spec = [(5, 4), (12, 2), (20, 6), (9, 3), (3, 5)]
     reqs = [Request(tokens=_prompt(n, seed=n), max_new_tokens=m, rid=i)
             for i, (n, m) in enumerate(spec)]
@@ -181,6 +187,27 @@ def test_scheduler_recycles_slots_and_matches_reference(f32_model):
     assert stats.generated_tokens == sum(m for _, m in spec)
     assert stats.prompt_pad_tokens == sum(
         eng.grid.length_bucket(n) - n for n, _ in spec)
+    # virtual-clock timing telemetry is exact: wall time decomposes into
+    # modeled compile + decode-step + prefill charges, nothing else
+    cost = StepCost()
+    assert stats.wall_s == pytest.approx(
+        stats.compile_s + stats.steps * cost.decode_step_s
+        + cost.prefill_s(stats.prompt_tokens + stats.prompt_pad_tokens))
+    # cold programs each pay the one-off charge exactly once: one prefill
+    # program per length bucket hit (8, 16, 32) + one decode program
+    assert stats.compile_s == pytest.approx(4 * cost.compile_s)
+    assert stats.tokens_per_s == pytest.approx(
+        stats.generated_tokens / (stats.wall_s - stats.compile_s))
+    # a second identical queue on the warm engine charges no compile time
+    reqs2 = [Request(tokens=_prompt(n, seed=n), max_new_tokens=m, rid=i)
+             for i, (n, m) in enumerate(spec)]
+    results2, stats2 = eng.serve_queue(reqs2)
+    assert stats2.compile_s == 0.0
+    assert stats2.wall_s == pytest.approx(
+        stats2.steps * cost.decode_step_s
+        + cost.prefill_s(stats2.prompt_tokens + stats2.prompt_pad_tokens))
+    for r, r2 in zip(results, results2):
+        np.testing.assert_array_equal(r.tokens, r2.tokens)
 
 
 def test_scheduler_eos_stops_stream(f32_model):

@@ -1,0 +1,561 @@
+"""Async SLO-aware serving front end + virtual clock (DESIGN.md §12).
+
+Everything here runs on the simulated clock: arrivals, TTFT, queue
+delay and wall-time telemetry are deterministic functions of (trace
+seed, StepCost), so these are exact tests, not tolerance games.
+
+The property suite exists twice: seeded-rng parametrized versions that
+always run, and hypothesis-widened versions (same invariant functions,
+randomized policy knobs) that run where hypothesis is installed.
+"""
+
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serve.clock import (Clock, RealClock, StepCost, VirtualClock,
+                               ensure_clock)
+from repro.serve.engine import Engine
+from repro.serve.frontend import AdmissionError, AsyncEngine
+from repro.serve.scheduler import Request
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+COST = StepCost()                        # the default deterministic model
+
+
+# ---------------------------------------------------------------------------
+# fixtures / helpers
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def f32_model():
+    from repro.configs import get_reduced_config
+    from repro.models.registry import build_model
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=512, d_ff=1024, num_layers=2, vocab_size=1024,
+        num_heads=8, num_kv_heads=8, head_dim=64, dtype="float32")
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    return model, params, axes
+
+
+def make_engine(f32_model, *, max_len=256, max_batch=2, max_prompt=32,
+                clock=None):
+    model, params, axes = f32_model
+    return Engine(model, params, axes, max_len=max_len, max_batch=max_batch,
+                  max_prompt=max_prompt, prepack=False, clock=clock)
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1024, size=n).astype(np.int32)
+
+
+def rand_trace(seed, n, *, mean_gap_s=0.002, tiers=3,
+               tenants=("acme", "bolt", "crux"), max_prompt=24):
+    """Seeded open-loop trace with random interleavings of arrival,
+    prompt length, decode budget (incl. the instant-finish
+    max_new_tokens=1 path), priority and tenant."""
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(mean_gap_s))
+        p = int(rng.integers(2, max_prompt))
+        reqs.append(Request(
+            tokens=rng.integers(0, 1024, size=p).astype(np.int32),
+            max_new_tokens=int(rng.integers(1, 6)), rid=i,
+            arrival_time=t, priority=int(rng.integers(0, tiers)),
+            tenant=str(tenants[int(rng.integers(0, len(tenants)))])))
+    return reqs
+
+
+def check_invariants(afe, streams, stats, n_submitted):
+    """The §12 conservation laws: no slot leaks, every stream reaches a
+    terminal state, and the telemetry counts tie out exactly — across
+    ANY interleaving of arrivals, completions, rejections, capacity
+    truncation and starvation escalations."""
+    # slot conservation: every slot back in the free pool, none live
+    assert not afe.sched.active
+    assert sorted(afe.sched.free) == list(range(afe.sched.slots))
+    # every stream terminal, exactly one terminal state each
+    assert len(streams) == n_submitted
+    n_rej = sum(s.rejected for s in streams)
+    n_uns = sum(s.result is None and not s.rejected for s in streams)
+    n_adm = sum(s.result is not None for s in streams)
+    assert all(s.done for s in streams)
+    assert n_rej + n_uns + n_adm == n_submitted
+    assert stats.rejected == n_rej
+    assert stats.unserved == n_uns
+    assert stats.admitted == n_adm
+    assert stats.completed == sum(s.completed for s in streams)
+    # token conservation: the stats ledger equals the streamed tokens
+    assert stats.generated_tokens == sum(len(s.tokens) for s in streams)
+    for s in streams:
+        if s.result is not None:
+            assert list(s.result.tokens) == s.tokens
+            assert s.queue_delay is not None and s.queue_delay >= 0
+            assert s.ttft is not None and s.ttft >= 0
+            # stream timestamps never rewind
+            assert all(b >= a for a, b in zip(s.token_times,
+                                              s.token_times[1:]))
+        else:
+            assert s.tokens == []
+    # per-tier ledgers sum to the totals
+    assert sum(t.admitted for t in stats.tiers.values()) == n_adm
+    assert sum(t.rejected for t in stats.tiers.values()) == n_rej
+    assert sum(t.generated_tokens for t in stats.tiers.values()) \
+        == stats.generated_tokens
+
+
+# ---------------------------------------------------------------------------
+# the clock seam
+# ---------------------------------------------------------------------------
+
+
+def test_clock_protocol():
+    vc = VirtualClock(start=2.0)
+    assert vc.virtual and isinstance(vc, Clock)
+    assert vc.now() == 2.0
+    assert vc.advance(0.5) == 2.5
+    assert vc.advance_to(2.25) == 2.5          # never rewinds
+    with pytest.raises(ValueError):
+        vc.advance(-1.0)
+    rc = RealClock()
+    assert not rc.virtual and isinstance(rc, Clock)
+    assert rc.now() <= rc.now()
+    with pytest.raises(TypeError):
+        rc.advance(1.0)
+    assert ensure_clock(None).virtual is False
+    assert ensure_clock(vc) is vc
+
+
+def test_virtual_clock_sleep_advances_without_blocking():
+    vc = VirtualClock()
+
+    async def go():
+        await vc.sleep(1.5)
+        return vc.now()
+
+    assert asyncio.run(go()) == 1.5
+
+
+def test_step_cost_model():
+    c = StepCost(decode_step_s=2e-3, prefill_token_s=1e-5)
+    assert c.prefill_s(100) == pytest.approx(1e-3)
+    assert c.decode_step_s == 2e-3
+
+
+def test_scheduler_virtual_wall_accounting(f32_model):
+    """On the virtual clock the scheduler's wall/compile/throughput
+    telemetry is an EXACT function of its own counters and the cost
+    model — the §12 retrofit that replaces wall-clock-noise telemetry
+    with checkable numbers."""
+    eng = make_engine(f32_model, max_len=128, clock=VirtualClock())
+    reqs = [Request(tokens=_prompt(n, seed=n), max_new_tokens=m, rid=i)
+            for i, (n, m) in enumerate([(5, 4), (12, 2), (20, 6), (9, 3)])]
+    _, stats = eng.serve_queue(reqs)
+    want = (stats.compile_s
+            + stats.steps * COST.decode_step_s
+            + COST.prefill_s(stats.prompt_tokens + stats.prompt_pad_tokens))
+    assert stats.wall_s == pytest.approx(want)
+    assert stats.tokens_per_s == pytest.approx(
+        stats.generated_tokens / (stats.wall_s - stats.compile_s))
+    # cold programs each charged exactly once at the modeled price
+    assert stats.compile_s == pytest.approx(
+        COST.compile_s * round(stats.compile_s / COST.compile_s))
+    # a second identical queue on the warm engine charges no compile
+    _, stats2 = eng.serve_queue([dataclasses.replace(r) for r in reqs])
+    assert stats2.compile_s == 0.0
+    assert stats2.wall_s == pytest.approx(
+        stats2.steps * COST.decode_step_s
+        + COST.prefill_s(stats2.prompt_tokens + stats2.prompt_pad_tokens))
+
+
+# ---------------------------------------------------------------------------
+# Request back-compat (arrival_time / priority / tenant satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_request_json_roundtrip_and_old_records():
+    r = Request(tokens=np.asarray([3, 1, 4], np.int32), max_new_tokens=7,
+                eos_id=2, rid="abc", arrival_time=1.25, priority=2,
+                tenant="acme")
+    back = Request.from_json(r.to_json())
+    assert back.to_json() == r.to_json()
+    assert list(back.tokens) == [3, 1, 4]
+    # a pre-§12 serialized record (no arrival/priority/tenant) loads
+    # with the closed-loop defaults
+    old = {"tokens": [5, 6], "max_new_tokens": 3, "eos_id": None,
+           "rid": 0}
+    r2 = Request.from_json(old)
+    assert (r2.arrival_time, r2.priority, r2.tenant) == (0.0, 0, "default")
+    # and old positional/keyword construction still works unchanged
+    r3 = Request(np.asarray([1], np.int32), 4, None, "rid")
+    assert r3.priority == 0 and r3.tenant == "default"
+
+
+def test_old_serve_queue_callsites_unchanged(f32_model):
+    """The §8 closed-loop entry point neither requires nor reacts to the
+    new fields: a pre-§12 caller gets the same results object shape and
+    ordering as before."""
+    eng = make_engine(f32_model, max_len=128)
+    reqs = [Request(tokens=_prompt(n, seed=n), max_new_tokens=3, rid=n)
+            for n in (5, 11)]
+    results, stats = eng.serve_queue(reqs)
+    assert [r.rid for r in results] == [5, 11]
+    assert all(r.completed and len(r.tokens) == 3 for r in results)
+    assert stats.admitted == stats.completed == 2
+    # JSON round-tripped requests serve identically
+    results2, _ = eng.serve_queue(
+        [Request.from_json(r.to_json()) for r in reqs])
+    for a, b in zip(results, results2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ---------------------------------------------------------------------------
+# byte-identity with the closed-loop scheduler
+# ---------------------------------------------------------------------------
+
+
+SPEC = [(5, 4), (12, 2), (20, 6), (9, 3), (3, 5), (7, 1)]
+
+
+def _spec_requests():
+    return [Request(tokens=_prompt(n, seed=n), max_new_tokens=m, rid=i)
+            for i, (n, m) in enumerate(SPEC)]
+
+
+def test_frontend_byte_identical_to_serve_queue(f32_model):
+    """Default-policy front end on an all-arrived-at-once trace produces
+    BYTE-identical tokens, admission clocks and queue waits to
+    ``Engine.serve_queue`` — both drive the same step-driven core."""
+    eng = make_engine(f32_model, max_len=128, clock=VirtualClock())
+    results, stats = eng.serve_queue(_spec_requests())
+    afe = AsyncEngine(eng, clock=VirtualClock())
+    streams, astats = afe.simulate(_spec_requests())
+    assert len(streams) == len(results)
+    for r, s in zip(results, streams):
+        assert s.tokens == list(r.tokens)
+        assert s.result.admitted_at == r.admitted_at
+        assert s.result.finished_at == r.finished_at
+        assert s.result.queue_steps == r.queue_steps
+        assert s.result.completed == r.completed
+    assert (astats.steps, astats.admitted, astats.completed) \
+        == (stats.steps, stats.admitted, stats.completed)
+    assert astats.generated_tokens == stats.generated_tokens
+
+
+def test_simulate_is_deterministic(f32_model):
+    """Two simulations of the same seeded trace agree exactly: tokens,
+    every timestamp, and the whole stats ledger."""
+    runs = []
+    for _ in range(2):
+        # fresh engine per run: the warm-program set is engine state, so
+        # an identical COLD run is the reproducibility contract
+        eng = make_engine(f32_model, max_len=512, max_batch=2,
+                          clock=VirtualClock())
+        afe = AsyncEngine(eng, queue_limit=6, prefill_budget=16,
+                          starvation_steps=16, clock=VirtualClock())
+        runs.append(afe.simulate(rand_trace(7, 14)))
+    (s1, st1), (s2, st2) = runs
+    for a, b in zip(s1, s2):
+        assert a.tokens == b.tokens
+        assert a.token_times == b.token_times
+        assert a.rejected == b.rejected and a.completed == b.completed
+        assert (a.ttft is None) == (b.ttft is None)
+        if a.ttft is not None:
+            assert a.ttft == b.ttft
+    for f in ("steps", "admitted", "completed", "unserved", "rejected",
+              "generated_tokens", "prompt_tokens", "prompt_pad_tokens",
+              "queue_steps_total", "compile_s", "wall_s"):
+        assert getattr(st1, f) == getattr(st2, f), f
+
+
+# ---------------------------------------------------------------------------
+# property suite (seeded) — slot leaks, starvation, backpressure, budget
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,queue_limit,budget,max_len", [
+    (0, 32, None, 512),
+    (1, 3, 16, 512),          # tight queue -> rejections
+    (2, 32, 8, 160),          # tight budget + tight capacity -> truncation
+    (3, 2, None, 96),         # capacity exhaustion -> unserved drops
+])
+def test_no_slot_leak_random_interleavings(f32_model, seed, queue_limit,
+                                           budget, max_len):
+    eng = make_engine(f32_model, max_len=max_len, clock=VirtualClock())
+    trace = rand_trace(seed, 12)
+    afe = AsyncEngine(eng, queue_limit=queue_limit, prefill_budget=budget,
+                      starvation_steps=16, clock=VirtualClock())
+    streams, stats = afe.simulate(trace)
+    check_invariants(afe, streams, stats, len(trace))
+
+
+def test_low_priority_tenants_not_starved(f32_model):
+    """A continuous stream of tier-0 arrivals must not starve a tier-2
+    tenant: starvation aging escalates it after ``starvation_steps``
+    decode steps, bounding its wait."""
+    eng = make_engine(f32_model, max_len=1024, max_batch=1,
+                      clock=VirtualClock())
+    starve = 8
+    trace = [Request(tokens=_prompt(6, seed=100 + i), max_new_tokens=4,
+                     rid=f"hi{i}", arrival_time=i * 1e-4, priority=0,
+                     tenant="flood")
+             for i in range(12)]
+    trace.append(Request(tokens=_prompt(6, seed=50), max_new_tokens=4,
+                         rid="lo", arrival_time=1e-4, priority=2,
+                         tenant="patient"))
+    afe = AsyncEngine(eng, queue_limit=64, starvation_steps=starve,
+                      clock=VirtualClock())
+    streams, stats = afe.simulate(trace)
+    check_invariants(afe, streams, stats, len(trace))
+    lo = next(s for s in streams if s.rid == "lo")
+    assert lo.completed
+    # aging bound: once escalated the request is next in line; with one
+    # slot it waits at most the escalation threshold plus one stream's
+    # worth of decode steps before admission
+    assert lo.queue_steps <= starve + 2 * max(m.max_new_tokens
+                                              for m in trace)
+    # it must NOT have waited for the whole flood to drain first
+    flood_done = [s for s in streams if s.tenant == "flood"]
+    assert lo.result.admitted_at < max(s.result.finished_at
+                                       for s in flood_done)
+    assert stats.tiers[2].completed == 1
+
+
+def test_tenant_fairness_round_robin(f32_model):
+    """Within one tier, two tenants submitting bursts at t=0 are admitted
+    alternately (round-robin), not in submission order."""
+    eng = make_engine(f32_model, max_len=512, max_batch=1,
+                      clock=VirtualClock())
+    trace = [Request(tokens=_prompt(5, seed=i), max_new_tokens=2,
+                     rid=f"a{i}", tenant="a") for i in range(3)]
+    trace += [Request(tokens=_prompt(5, seed=10 + i), max_new_tokens=2,
+                      rid=f"b{i}", tenant="b") for i in range(3)]
+    afe = AsyncEngine(eng, clock=VirtualClock())
+    streams, stats = afe.simulate(trace)
+    order = sorted((s for s in streams if s.result is not None),
+                   key=lambda s: (s.result.admitted_at, s.queue_steps))
+    tenants = [s.tenant for s in order]
+    assert tenants == ["a", "b", "a", "b", "a", "b"]
+
+
+def test_priority_tiers_admit_first(f32_model):
+    """With everything queued at once and one slot, tier-0 requests are
+    all admitted before tier-1 despite later submission."""
+    eng = make_engine(f32_model, max_len=512, max_batch=1,
+                      clock=VirtualClock())
+    trace = [Request(tokens=_prompt(5, seed=i), max_new_tokens=2,
+                     rid=f"lo{i}", priority=1) for i in range(3)]
+    trace += [Request(tokens=_prompt(5, seed=10 + i), max_new_tokens=2,
+                      rid=f"hi{i}", priority=0) for i in range(3)]
+    afe = AsyncEngine(eng, starvation_steps=1000, clock=VirtualClock())
+    streams, _ = afe.simulate(trace)
+    by_adm = sorted(streams, key=lambda s: s.result.admitted_at)
+    assert [s.priority for s in by_adm] == [0, 0, 0, 1, 1, 1]
+
+
+def test_backpressure_bounded_queue(f32_model):
+    """Admission control: with ``queue_limit`` pending the (limit+1)-th
+    concurrent submission is rejected immediately, carries no tokens,
+    and the accepted ones all complete."""
+    eng = make_engine(f32_model, max_len=512, max_batch=1,
+                      clock=VirtualClock())
+    trace = [Request(tokens=_prompt(6, seed=i), max_new_tokens=8, rid=i,
+                     arrival_time=0.0) for i in range(8)]
+    afe = AsyncEngine(eng, queue_limit=3, clock=VirtualClock())
+    streams, stats = afe.simulate(trace)
+    check_invariants(afe, streams, stats, len(trace))
+    # all 8 arrive in the same instant, before the scheduler can run:
+    # 3 fill the bounded queue, the other 5 bounce
+    assert stats.rejected == 5
+    assert [s.rejected for s in streams] == [False] * 3 + [True] * 5
+    assert all(s.completed for s in streams if not s.rejected)
+    assert all(s.tokens == [] for s in streams if s.rejected)
+
+
+def test_prefill_budget_chunks_admissions(f32_model):
+    """Chunk-budgeted prefill: with a live batch, at most
+    ``prefill_budget`` prompt tokens are admitted per decode step, so a
+    deep queue's prefill work interleaves with decode instead of
+    stalling it; unbudgeted, the whole queue admits at one clock."""
+    def run(budget):
+        eng = make_engine(f32_model, max_len=1024, max_batch=4,
+                          clock=VirtualClock())
+        trace = [Request(tokens=_prompt(14, seed=i), max_new_tokens=6,
+                         rid=i, arrival_time=0.0) for i in range(4)]
+        afe = AsyncEngine(eng, prefill_budget=budget, clock=VirtualClock())
+        streams, stats = afe.simulate(trace)
+        check_invariants(afe, streams, stats, len(trace))
+        return streams
+
+    unbudgeted = run(None)
+    assert len({s.result.admitted_at for s in unbudgeted}) == 1
+    budgeted = run(16)       # length bucket 16 = one admission per step
+    adm = sorted(s.result.admitted_at for s in budgeted)
+    # the idle batch bypasses the budget (r0) and the initial credit
+    # covers r1 at the same clock; r2/r3 each wait for one decode step's
+    # worth of fresh credit
+    assert [b - a for a, b in zip(adm, adm[1:])] == [0, 1, 1]
+
+
+def test_submit_rejected_raises_async(f32_model):
+    eng = make_engine(f32_model, max_len=256, clock=VirtualClock())
+    afe = AsyncEngine(eng, queue_limit=2, clock=VirtualClock())
+
+    async def go():
+        await afe.submit(Request(tokens=_prompt(5, seed=0), rid=0))
+        await afe.submit(Request(tokens=_prompt(5, seed=1), rid=1))
+        with pytest.raises(AdmissionError):
+            await afe.submit(Request(tokens=_prompt(5, seed=2), rid=2))
+        afe._drop_pending()
+        afe.close()
+        return True
+
+    assert asyncio.run(go())
+    assert afe.stats.rejected == 1
+
+
+def test_async_driver_streams_tokens_live(f32_model):
+    """The asyncio driver on the virtual clock: concurrent producers
+    ``await submit``, consume ``async for`` token streams, and the
+    result matches the same requests served closed-loop."""
+    eng = make_engine(f32_model, max_len=256, clock=VirtualClock())
+    reqs = [Request(tokens=_prompt(n, seed=n), max_new_tokens=m, rid=i)
+            for i, (n, m) in enumerate([(5, 4), (9, 3)])]
+
+    async def go():
+        afe = AsyncEngine(eng, clock=VirtualClock())
+        # pin the base clock serve_queue would pick for this queue so
+        # the comparison below is byte-exact (run() cannot peek at
+        # future arrivals, so by default it opens at the grid maximum)
+        afe.open(max(lb for _, lb in map(afe.sched.prepare, reqs)))
+        loop_task = asyncio.create_task(afe.run())
+        streams = [await afe.submit(r) for r in reqs]
+        collected = []
+        for s in streams:
+            toks = []
+            async for tok in s:
+                toks.append(tok)
+            collected.append(toks)
+        afe.request_stop()
+        await loop_task
+        return streams, collected
+
+    streams, collected = asyncio.run(go())
+    ref, _ = eng.serve_queue([dataclasses.replace(r) for r in reqs])
+    for s, toks, r in zip(streams, collected, ref):
+        assert s.completed
+        assert toks == s.tokens == list(r.tokens)
+        assert s.ttft is not None and s.ttft > 0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-widened property suite (runs where hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+    HSET = settings(max_examples=5, deadline=None)
+
+    @HSET
+    @given(seed=st.integers(0, 10_000), queue_limit=st.integers(2, 16),
+           budget=st.sampled_from([None, 8, 16, 32]),
+           slots=st.integers(1, 2), n=st.integers(1, 10))
+    def test_hyp_no_slot_leak(f32_model, seed, queue_limit, budget, slots,
+                              n):
+        """No slot leak / ledger drift across random arrival-completion
+        interleavings and random policy knobs."""
+        eng = make_engine(f32_model, max_len=384, clock=VirtualClock())
+        afe = AsyncEngine(eng, slots=slots, queue_limit=queue_limit,
+                          prefill_budget=budget, starvation_steps=12,
+                          clock=VirtualClock())
+        trace = rand_trace(seed, n)
+        streams, stats = afe.simulate(trace)
+        check_invariants(afe, streams, stats, n)
+
+    @HSET
+    @given(seed=st.integers(0, 10_000), n=st.integers(1, 6))
+    def test_hyp_byte_identity_with_serve_queue(f32_model, seed, n):
+        """Default policy == closed-loop scheduler, for random queues."""
+        rng = np.random.default_rng(seed)
+        spec = [(int(rng.integers(2, 20)), int(rng.integers(1, 5)))
+                for _ in range(n)]
+        mk = lambda: [Request(tokens=_prompt(p, seed=seed + i),
+                              max_new_tokens=m, rid=i)
+                      for i, (p, m) in enumerate(spec)]
+        eng = make_engine(f32_model, max_len=256, clock=VirtualClock())
+        results, _ = eng.serve_queue(mk())
+        afe = AsyncEngine(eng, clock=VirtualClock())
+        streams, _ = afe.simulate(mk())
+        for r, s in zip(results, streams):
+            assert s.tokens == list(r.tokens)
+            assert s.result.completed == r.completed
+
+    @HSET
+    @given(seed=st.integers(0, 10_000))
+    def test_hyp_no_starvation(f32_model, seed):
+        """Every accepted request terminates (no infinite deferral) no
+        matter the tier/tenant mix, given cache capacity."""
+        eng = make_engine(f32_model, max_len=2048, clock=VirtualClock())
+        afe = AsyncEngine(eng, queue_limit=64, starvation_steps=8,
+                          clock=VirtualClock())
+        trace = rand_trace(seed, 10, mean_gap_s=5e-4)
+        streams, stats = afe.simulate(trace)
+        check_invariants(afe, streams, stats, len(trace))
+        assert all(s.completed for s in streams if not s.rejected)
+
+
+# ---------------------------------------------------------------------------
+# the SLO scoreboard as a regression test (fixed-seed Poisson trace)
+# ---------------------------------------------------------------------------
+
+
+def test_latency_regression_fixed_seed_poisson():
+    """The BENCH_6 scoreboard run at smoke scale, asserted: bounded p99
+    TTFT at low offered load, queue delay monotone non-decreasing in
+    load, and throughput that rises with offered load (same seeded
+    work, time-compressed).  Deterministic on the virtual clock."""
+    from benchmarks import serving_slo
+    metrics = []
+    serving_slo.run(rates=(20.0, 60.0, 180.0), n_requests=16, max_batch=2,
+                    prepack=False, collect=metrics)
+    assert [m["rate"] for m in metrics] == [20.0, 60.0, 180.0]
+    low = metrics[0]
+    # at ~1/10th of capacity a first token arrives within a handful of
+    # decode-step times (p99 measured 3.8ms; 15ms = headroom, not noise
+    # — the number cannot drift on the virtual clock)
+    assert low["p99_ttft_s"] < 15e-3
+    assert low["rejected"] == 0 and low["unserved"] == 0
+    delays = [m["mean_queue_delay_s"] for m in metrics]
+    assert all(b >= a for a, b in zip(delays, delays[1:])), delays
+    p99s = [m["p99_ttft_s"] for m in metrics]
+    assert all(p > 0 for p in p99s)
+    tps = [m["tokens_per_s"] for m in metrics]
+    assert all(b >= a for a, b in zip(tps, tps[1:])), tps
+
+
+def test_bench6_json_schema(tmp_path):
+    """BENCH_6.json rides the BENCH_5 schema (run.py --json contract)."""
+    import json
+
+    from benchmarks.common import write_bench_json
+    out = write_bench_json(tmp_path / "BENCH_6.json", "BENCH_6",
+                           [("sec12_serving_slo",
+                             [("slo_rate20_p99_ttft", "3816", "p50=…")])])
+    blob = json.loads(out.read_text())
+    assert blob["bench"] == "BENCH_6" and blob["failed_sections"] == 0
+    assert blob["sections"][0]["section"] == "sec12_serving_slo"
+    row = blob["sections"][0]["rows"][0]
+    assert set(row) == {"name", "us_per_call", "derived"}
