@@ -1,0 +1,133 @@
+"""Cold-start benchmark: compile-once serving (DESIGN.md §13).
+
+Measures the thing the ProgramStore exists for — engine start-to-first-
+token work with and without a populated program cache:
+
+* **cold_first_traffic**: a fresh engine with NO disk cache pays trace +
+  XLA compile for every (bucket, shape) program on first traffic;
+* **precompile**: the one-off ``install --precompile`` sweep that AOT-
+  compiles the same grid into the persistent cache;
+* **warm_restart**: a fresh engine against the populated cache
+  deserializes every program (zero traces) — the per-program breakdown
+  comes straight from ``ProgramStore.report()``.
+
+Real wall clock by design (the object under test IS compile/load time);
+the cold/warm ratio is the headline number.
+
+    PYTHONPATH=src python -m benchmarks.cold_start [--json [PATH]]
+
+``--json`` writes ``benchmarks/artifacts/BENCH_7.json`` in the shared
+BENCH_*.json schema for the CI artifact trail.
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+
+DEFAULT_JSON = Path(__file__).resolve().parent / "artifacts" / "BENCH_7.json"
+
+BUCKETS = (1, 2)
+LENGTHS = (8, 16)
+MAX_LEN = 64
+
+
+def _build(program_cache):
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import Engine
+
+    cfg = get_reduced_config("qwen1_5_4b")
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, axes, max_len=MAX_LEN, buckets=BUCKETS,
+                 max_prompt=LENGTHS[-1], program_cache=program_cache)
+    return cfg, eng
+
+
+def _first_traffic(cfg, eng):
+    """The canonical first-traffic mix: aligned generate + ragged serve +
+    continuous queue — touches prefill, decode and prefill_row."""
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(0)
+    eng.generate({"tokens": np.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 8)), np.int32)}, steps=3)
+    eng.serve([{"tokens": np.asarray(
+        rng.integers(0, cfg.vocab_size, 5), np.int32)},
+        {"tokens": np.asarray(
+            rng.integers(0, cfg.vocab_size, 11), np.int32)}], steps=2)
+    eng.serve_queue([Request(
+        tokens=np.asarray(rng.integers(0, cfg.vocab_size, n), np.int32),
+        max_new_tokens=2, rid=i) for i, n in enumerate((5, 12))])
+
+
+def run(json_path=None):
+    from repro.core.install import precompile_arch
+
+    cache_dir = Path(tempfile.mkdtemp(prefix="repro_cold_start_"))
+    try:
+        # -- cold engine, no cache: lazy compile on first traffic -------
+        cfg, eng_cold = _build(False)
+        t0 = time.perf_counter()
+        _first_traffic(cfg, eng_cold)
+        cold_wall_s = time.perf_counter() - t0
+        cold = eng_cold.programs.stats()
+
+        # -- the install-time sweep: AOT-compile the grid once ----------
+        t0 = time.perf_counter()
+        grid = precompile_arch(cfg, BUCKETS, LENGTHS, max_len=MAX_LEN,
+                               cache_dir=cache_dir)
+        precompile_s = time.perf_counter() - t0
+
+        # -- warm restart: fresh engine, populated cache ----------------
+        cfg, eng_warm = _build(cache_dir)
+        t0 = time.perf_counter()
+        _first_traffic(cfg, eng_warm)
+        warm_wall_s = time.perf_counter() - t0
+        warm = eng_warm.programs.stats()
+        assert warm["traced"] == 0, warm      # the contract, enforced here too
+
+        rows = [
+            ("cold_first_traffic_us", round(cold_wall_s * 1e6, 1),
+             f"traced={cold['traced']} compile_s={cold['compile_s']:.2f}"),
+            ("precompile_grid_us", round(precompile_s * 1e6, 1),
+             f"programs={len(grid)}"),
+            ("warm_first_traffic_us", round(warm_wall_s * 1e6, 1),
+             f"traced={warm['traced']} from_disk={warm['from_disk']} "
+             f"load_s={warm['load_s']:.2f}"),
+            ("cold_vs_warm_speedup", round(cold_wall_s / warm_wall_s, 2),
+             "first-traffic wall ratio"),
+        ]
+        # per-program breakdown of the warm start (all disk loads)
+        for p in sorted(eng_warm.programs.report(), key=lambda r: r["key"]):
+            rows.append((f"load_{p['key'][:40]}",
+                         round(p["compile_s"] * 1e6, 1), p["source"]))
+        emit(rows)
+        if json_path:
+            write_bench_json(json_path, "BENCH_7",
+                             [("cold_start", rows)])
+            print(f"wrote {json_path}")
+        return rows
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const=str(DEFAULT_JSON),
+                    default=None)
+    args = ap.parse_args(argv)
+    run(json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -116,6 +116,23 @@ def parse_mesh(spec: str):
     return AbstractMesh(tuple(axes))
 
 
+def concrete_mesh(spec: str):
+    """``data=4,model=2`` -> a real device Mesh, or None when the host
+    has too few devices.  ``--precompile`` needs one: XLA compiles (and
+    serializes) sharded executables only against concrete devices."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    axes = [(name.strip(), int(size))
+            for name, size in (p.split("=") for p in spec.split(","))]
+    need = int(np.prod([s for _, s in axes]))
+    devs = jax.devices()
+    if len(devs) < need:
+        return None
+    return Mesh(np.asarray(devs[:need]).reshape([s for _, s in axes]),
+                tuple(name for name, _ in axes))
+
+
 def serving_problems(cfg, buckets: tuple = SERVE_BUCKETS,
                      lengths: tuple = ()) -> list[Problem]:
     """The (m, k, n) set the serving path hits for one architecture:
@@ -175,6 +192,31 @@ def install_arch(cfg, buckets: tuple = SERVE_BUCKETS,
     return n_plans
 
 
+def precompile_arch(cfg, buckets: tuple, lengths: tuple, *, max_len: int,
+                    mesh=None, opts=None, cache_dir=None) -> list:
+    """AOT-compile one arch's serving program grid into the persistent
+    program cache (the ``--precompile`` phase; DESIGN.md §13).  Returns
+    the per-program report rows from ``serve.programs.precompile_grid``;
+    a later Engine start with the same shape envelope traces nothing."""
+    import jax
+
+    from repro.models.registry import build_model
+    from repro.serve.programs import precompile_grid
+
+    model = build_model(cfg)
+    captured = {}
+
+    def init_shapes(rng):
+        params, axes = model.init(rng)
+        captured["axes"] = axes
+        return params
+
+    jax.eval_shape(init_shapes, jax.random.PRNGKey(0))
+    return precompile_grid(model, captured["axes"], buckets=buckets,
+                           lengths=lengths, max_len=max_len, mesh=mesh,
+                           opts=opts, cache_dir=cache_dir)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--measure", action="store_true",
@@ -207,6 +249,19 @@ def main(argv=None):
                     help="verify-only: re-run the sweep against the cache "
                          "file with a fresh memory and fail on any registry "
                          "miss (the engine-start-is-lookup-only contract)")
+    ap.add_argument("--precompile", action="store_true",
+                    help="also AOT-compile the serving program grid into "
+                         "the persistent program cache (REPRO_PROGRAM_CACHE)"
+                         " — a same-shaped Engine start then traces NOTHING")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced (CI-sized) configs — pairs with "
+                         "--precompile for tractable compile sweeps")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="engine cache capacity precompiled programs "
+                         "assume (0 = 2 x max-prompt); must match "
+                         "Engine(max_len=...) for the cache to hit")
+    ap.add_argument("--program-cache", default="",
+                    help="program-cache directory override for --precompile")
     args = ap.parse_args(argv)
     archs = ([a.strip() for a in args.archs.split(",") if a.strip()]
              or ARCH_IDS)
@@ -214,13 +269,19 @@ def main(argv=None):
     lengths = length_buckets_for(args.max_prompt) if args.max_prompt else ()
     mesh = parse_mesh(args.mesh) if args.mesh else None
 
+    def cfg_of(arch):
+        if args.reduced:
+            from repro.configs import get_reduced_config
+            return get_reduced_config(arch)
+        return get_config(arch)
+
     if args.check:
         registry.clear_memory()
 
     t0 = time.time()
     n_plans = 0
     for arch in archs:
-        cfg = get_config(arch)
+        cfg = cfg_of(arch)
         n = install_arch(cfg, buckets, lengths, mesh=mesh,
                          measure=args.measure, iters=args.iters,
                          limit_shapes=args.shapes)
@@ -293,12 +354,39 @@ def main(argv=None):
                   f"mxu_eff=x{hw_cal.mxu_efficiency:.3g} "
                   f"grid_overhead={hw_cal.grid_overhead_s:.3g}s")
             for arch in archs:
-                install_arch(get_config(arch), buckets, lengths, mesh=mesh,
+                install_arch(cfg_of(arch), buckets, lengths, mesh=mesh,
                              measure=False, hw=hw_cal, force=True,
                              limit_shapes=args.shapes)
             registry.flush()
             print("re-ranked sweep under the calibrated model "
                   "(measured winners preserved)")
+
+    if args.precompile:
+        from repro.serve.programs import program_cache_dir
+        from repro.sharding.rules import ShardingOptions
+        pmesh, popts = None, None
+        if args.mesh:
+            pmesh = concrete_mesh(args.mesh)
+            if pmesh is None:
+                import jax
+                print(f"precompile: mesh '{args.mesh}' needs real devices "
+                      f"(host has {len(jax.devices())}) — compiling "
+                      f"unsharded instead")
+            else:
+                popts = ShardingOptions(dp_axes=tuple(
+                    a for a in ("pod", "data") if a in pmesh.shape))
+        max_len = args.max_len or 2 * (lengths[-1] if lengths else 64)
+        tp = time.time()
+        for arch in archs:
+            rows = precompile_arch(cfg_of(arch), buckets, lengths,
+                                   max_len=max_len, mesh=pmesh, opts=popts,
+                                   cache_dir=args.program_cache or None)
+            traced = sum(1 for r in rows if r["source"] == "traced")
+            print(f"{arch:24s} {len(rows):3d} programs "
+                  f"({traced} compiled, {len(rows) - traced} cached) "
+                  f"compile_s={sum(r['compile_s'] for r in rows):.1f}")
+        print(f"precompiled serving grids in {time.time()-tp:.1f}s "
+              f"-> {args.program_cache or program_cache_dir()}")
 
     print(f"\ninstalled {n_plans} execution plans over buckets {buckets} "
           f"x lengths {lengths or '(none)'} in {time.time()-t0:.1f}s "

@@ -83,6 +83,19 @@ def measure_cache_max() -> int:
     return int(raw) if raw else MEASURE_CACHE_MAX_DEFAULT
 
 
+# Bound on the pending miss log: an un-drained engine (no background
+# tuner attached) serving a pathological shape mix must not grow the
+# list forever.  Oldest keys evict first — the freshest misses are the
+# ones the next drain should tune.  Same env-override pattern as the
+# measurement-cache cap.
+MISS_LOG_MAX_DEFAULT = 1024
+
+
+def miss_log_max() -> int:
+    raw = os.environ.get("REPRO_MISS_LOG_MAX", "")
+    return int(raw) if raw else MISS_LOG_MAX_DEFAULT
+
+
 def _key(problem_key: str) -> str:
     return f"{_platform()}/{problem_key}"
 
@@ -251,6 +264,8 @@ class Registry:
             else:
                 self._stats["misses"] += 1
                 if problem_key not in self._missed_set:
+                    while len(self._missed) >= miss_log_max():
+                        self._missed_set.discard(self._missed.pop(0))
                     self._missed_set.add(problem_key)
                     self._missed.append(problem_key)
             return plan

@@ -124,6 +124,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
     from repro.models.registry import active_param_count
     from repro.optim.adamw import OptConfig
     from repro.serve.engine import pack_tree_for_serving
+    from repro.serve.programs import aot_lower
     from repro.sharding.context import sharding_ctx
     from repro.sharding.rules import param_pspecs
     from repro.train.step import make_train_step
@@ -154,8 +155,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
                              **(opt_overrides or {}))
             state, state_sh, p_axes = train_state_specs(model, ocfg, mesh, opts)
             step = make_train_step(model, ocfg, axes=p_axes)
-            jitted = jax.jit(step, in_shardings=(state_sh,
-                                                 bundle["batch_shardings"]))
+            fn, in_sh = step, (state_sh, bundle["batch_shardings"])
             args = (state, bundle["batch"])
             in_bytes = (_per_device_bytes(state, state_sh)
                         + _per_device_bytes(bundle["batch"],
@@ -163,9 +163,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
         elif sp.kind == "prefill":
             params, axes = _abstract_params(model)
             p_sh = _param_shardings(params, axes, mesh, opts)
-            jitted = jax.jit(model.prefill,
-                             in_shardings=(p_sh, bundle["batch_shardings"],
-                                           bundle["cache_shardings"]))
+            fn, in_sh = model.prefill, (p_sh, bundle["batch_shardings"],
+                                        bundle["cache_shardings"])
             args = (params, bundle["batch"], bundle["cache"])
             in_bytes = (_per_device_bytes(params, p_sh)
                         + _per_device_bytes(bundle["cache"],
@@ -180,16 +179,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
                     packed, is_leaf=lambda y: hasattr(y, "blocks"))
                 if hasattr(x, "blocks"))
             p_sh = _param_shardings(packed, axes, mesh, opts)
-            jitted = jax.jit(model.decode_step,
-                             in_shardings=(p_sh, bundle["cache_shardings"],
-                                           bundle["tokens_sharding"]))
+            fn, in_sh = model.decode_step, (p_sh, bundle["cache_shardings"],
+                                            bundle["tokens_sharding"])
             args = (packed, bundle["cache"], bundle["tokens"])
             in_bytes = (_per_device_bytes(packed, p_sh)
                         + _per_device_bytes(bundle["cache"],
                                             bundle["cache_shardings"]))
 
+        # lowering goes through the SAME helper the serving ProgramStore
+        # compiles with (DESIGN.md §13), so dry-run cost numbers describe
+        # the exact programs install --precompile would persist
         t0 = time.time()
-        lowered = jitted.lower(*args)
+        lowered = aot_lower(fn, args, in_shardings=in_sh)
         t1 = time.time()
         compiled = lowered.compile()
         t2 = time.time()

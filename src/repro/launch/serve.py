@@ -92,6 +92,13 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=0)
     ap.add_argument("--no-prepack", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="serve tensor-parallel sharded: axis sizes over "
+                         "this host's devices, e.g. model=2 (DESIGN.md "
+                         "§13); fails if the host has too few devices")
+    ap.add_argument("--program-cache", default="",
+                    help="program-cache dir override ('off' disables "
+                         "persistence; default REPRO_PROGRAM_CACHE)")
     ap.add_argument("--background-tune", action="store_true",
                     help="on registry miss, serve off the calibrated-model "
                          "plan and wall-clock + commit the measured winner "
@@ -127,11 +134,25 @@ def main():
     else:
         max_len = args.max_len or (max_prompt + args.steps + 8)
 
+    mesh = opts = None
+    if args.mesh:
+        from repro.core.install import concrete_mesh
+        from repro.sharding.rules import ShardingOptions
+        mesh = concrete_mesh(args.mesh)
+        if mesh is None:
+            raise SystemExit(f"--mesh {args.mesh}: host has only "
+                             f"{len(jax.devices())} devices")
+        opts = ShardingOptions(dp_axes=tuple(
+            a for a in ("pod", "data") if a in mesh.shape))
+    program_cache = (False if args.program_cache.lower() in ("off", "0", "none")
+                     else args.program_cache) if args.program_cache else None
     eng = Engine(model, params, axes, max_len=max_len, max_batch=max_batch,
                  max_prompt=max_prompt, prepack=not args.no_prepack,
-                 background_tune=args.background_tune)
+                 background_tune=args.background_tune, mesh=mesh, opts=opts,
+                 program_cache=program_cache)
     print(f"buckets={eng.buckets} length_buckets={eng.grid.length} "
-          f"packed_leaves={len(eng.pack_report)}")
+          f"packed_leaves={len(eng.pack_report)}"
+          + (f" mesh={dict(mesh.shape)}" if mesh is not None else ""))
 
     def epilogue():
         from collections import Counter
@@ -139,6 +160,11 @@ def main():
         from repro.core import registry
         s = registry.stats()
         print(f"plan registry: {s['hits']} hits / {s['misses']} misses")
+        ps = eng.programs.stats()
+        print(f"program store: {ps['programs']} programs "
+              f"(traced={ps['traced']} disk={ps['from_disk']} "
+              f"reused={ps['reused']}) compile={ps['compile_s']:.2f}s "
+              f"load={ps['load_s']:.2f}s cache={ps['cache_dir']}")
         vr = eng.variant_report()
         if vr:
             counts = Counter(vr.values())

@@ -54,38 +54,10 @@ def batch_specs(cfg: ModelConfig, sp: ShapeSpec, *, with_labels: bool):
     return specs, axes
 
 
-CACHE_AXES = {
-    "pos": (),
-    "slot_pos": (None,),
-    # cache_seq: falls back to the model axis when kvheads can't take it
-    # (GQA kv < tp) — the sequence-sharded KV cache for long-context decode.
-    # cache_batch: dp-sharded even under serve_2d_tp (compute-path batch
-    # replication must not blow up cache residency).
-    "k": ("layers", "cache_batch", "cache_seq", "kvheads", "headdim"),
-    "v": ("layers", "cache_batch", "cache_seq", "kvheads", "headdim"),
-    "c": ("layers", "cache_batch", "cache_seq", "lora"),
-    "kr": ("layers", "cache_batch", "cache_seq", "rope"),
-    "ssm": ("layers", "cache_batch", "ssm_heads", "headdim", "state"),
-    "conv": ("layers", "cache_batch", "conv", "ssm_inner"),
-    "cross_k": ("layers", "cache_batch", "seq", "kvheads", "headdim"),
-    "cross_v": ("layers", "cache_batch", "seq", "kvheads", "headdim"),
-}
-
-
-def cache_axes_for(cfg: ModelConfig, key: str, ndim: int):
-    base = key
-    if key.startswith("dense") and "_" in key:
-        base = key.split("_", 1)[1]
-    ax = CACHE_AXES.get(base)
-    if ax is None:
-        return (None,) * ndim
-    if len(ax) == ndim:
-        return ax
-    if len(ax) == ndim - 1:          # hybrid: extra leading 'groups' dim
-        return ("groups",) + ax
-    if len(ax) == ndim + 1:          # dense{i}_* lack the layer dim
-        return ax[1:]
-    return (None,) * ndim
+# Cache-axis knowledge moved next to the param rules (DESIGN.md §13) so
+# the serving engine's mesh mode and this dry-run place caches identically;
+# re-exported here for existing callers.
+from repro.sharding.rules import CACHE_AXES, cache_axes_for, cache_pspecs  # noqa: F401,E402
 
 
 def input_specs(arch: str, shape_name: str, mesh: Optional[Mesh] = None,
@@ -147,12 +119,8 @@ def input_specs(arch: str, shape_name: str, mesh: Optional[Mesh] = None,
 
 
 def cache_shardings(cfg, cache_specs, mesh, opts):
-    ctx = ShardCtx(mesh, opts)
-    out = {}
-    for key, leaf in cache_specs.items():
-        ax = cache_axes_for(cfg, key, leaf.ndim)
-        out[key] = NamedSharding(mesh, ctx.spec_for(ax, leaf.shape))
-    return out
+    return {key: NamedSharding(mesh, spec)
+            for key, spec in cache_pspecs(cfg, cache_specs, mesh, opts).items()}
 
 
 def train_state_specs(model: ModelDef, ocfg: OptConfig, mesh, opts):

@@ -109,6 +109,45 @@ def _kind(cfg) -> str:
 
 
 # ---------------------------------------------------------------------------
+# the ONE layer-stack traversal
+# ---------------------------------------------------------------------------
+
+
+def layer_stack(cfg, x, layer_params, step, extras=(), *, remat=None,
+                scan=None):
+    """THE layer-stack entry point: every full-stack traversal (training /
+    prefill forward AND both decode cache branches) lowers through this one
+    helper, so all compiled programs share a single scan-body shape the
+    ProgramStore can fingerprint (DESIGN.md §13).
+
+    ``step(lp, x, *extra_slices) -> (x, per_layer_out)`` is the per-layer
+    body; ``extras`` are layer-stacked carries scanned alongside the params
+    (e.g. per-layer cache slabs).  ``remat``/``scan`` default to the config
+    flags (forward); decode passes ``remat=False, scan=True`` explicitly —
+    a one-token step never recomputes and always scans.
+    """
+    remat = cfg.remat if remat is None else remat
+    scan = cfg.scan_layers if scan is None else scan
+    xs = (layer_params,) + tuple(extras)
+
+    def body(xc, sl):
+        return step(sl[0], xc, *sl[1:])
+
+    if remat:
+        body = jax.checkpoint(body)
+    if scan:
+        return jax.lax.scan(body, x, xs)
+    n = jax.tree.leaves(layer_params)[0].shape[0]
+    outs = []
+    for i in range(n):
+        sl = jax.tree.map(lambda v: v[i], xs)
+        x, out = body(x, sl)
+        outs.append(out)
+    stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *outs)
+    return x, stacked
+
+
+# ---------------------------------------------------------------------------
 # model init
 # ---------------------------------------------------------------------------
 
@@ -168,26 +207,13 @@ def lm_forward(params, cfg, batch, *, collect_cache: bool = False,
             dense_kvs[i] = kv
         aux_total = aux_total + aux
 
-    def body(xc, lp):
+    def step(lp, xc):
         xo, kv, aux = _layer_fwd(lp, cfg, xc, kind, pos_offset=pos_offset,
                                  chunk=chunk, valid_from=valid_from)
         return xo, (kv if collect_cache else None, aux)
 
-    if cfg.remat:
-        body = jax.checkpoint(body)
-    if cfg.scan_layers:
-        x, (kvs, auxs) = jax.lax.scan(body, x, params["layers"])
-        aux_total = aux_total + auxs.sum()
-    else:
-        kvs_list = []
-        n_scan = cfg.num_layers - cfg.first_k_dense
-        for i in range(n_scan):
-            lp = jax.tree.map(lambda v: v[i], params["layers"])
-            x, (kv, aux) = body(x, lp)
-            kvs_list.append(kv)
-            aux_total = aux_total + aux
-        kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *kvs_list)
-               if collect_cache else None)
+    x, (kvs, auxs) = layer_stack(cfg, x, params["layers"], step)
+    aux_total = aux_total + auxs.sum()
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params["embed"], x, cfg.tie_embeddings)
@@ -309,26 +335,19 @@ def lm_decode_step(params, cfg, cache, tokens):
                                    pos, "dense", valid_from=valid_from)
             cache[f"dense{i}_{a}"], cache[f"dense{i}_{b_}"] = new
         a, b_ = _cache_pair_names(cfg)
-        xs = (params["layers"], cache[a], cache[b_])
-
-        def body(xc, layer_in):
-            lp, lk, lv = layer_in
-            xo, new = _layer_decode(lp, cfg, xc, (lk, lv), slot_pos, pos, kind,
-                                    valid_from=valid_from)
-            return xo, new
-
-        x, (nk, nv) = jax.lax.scan(body, x, xs)
-        cache[a], cache[b_] = nk, nv
+        extras = (cache[a], cache[b_])
     else:
-        xs = (params["layers"], cache["ssm"], cache["conv"])
+        a, b_ = "ssm", "conv"
+        slot_pos = valid_from = None
+        extras = (cache["ssm"], cache["conv"])
 
-        def body(xc, layer_in):
-            lp, ls, lc = layer_in
-            xo, new = _layer_decode(lp, cfg, xc, (ls, lc), None, pos, kind)
-            return xo, new
+    def step(lp, xc, c0, c1):
+        return _layer_decode(lp, cfg, xc, (c0, c1), slot_pos, pos, kind,
+                             valid_from=valid_from)
 
-        x, (ns, ncv) = jax.lax.scan(body, x, xs)
-        cache["ssm"], cache["conv"] = ns, ncv
+    x, (n0, n1) = layer_stack(cfg, x, params["layers"], step, extras,
+                              remat=False, scan=True)
+    cache[a], cache[b_] = n0, n1
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params["embed"], x, cfg.tie_embeddings)

@@ -8,9 +8,18 @@ every decoded token replays the bucket's execution plan (the paper's
 data-reuse scenario, where pack cost amortizes to zero).
 
 Request admission: an incoming request group of any size b <= max_batch is
-padded up to the nearest bucket and served from that bucket's jit cache —
-variable decode traffic never re-packs weights and never recompiles once a
-bucket is warm.  Groups larger than max_batch are split.
+padded up to the nearest bucket and served from that bucket's stored
+program — variable decode traffic never re-packs weights and never
+recompiles once a bucket is warm.  Groups larger than max_batch are split.
+
+Since §13 the compiled programs live in a :class:`~repro.serve.programs.
+ProgramStore` instead of ad-hoc ``jax.jit`` wrappers: every (bucket,
+shape) program is AOT-lowered once and persisted, so an engine restarted
+against a populated cache (``install --precompile``) performs zero traces
+on first traffic.  Passing a CONCRETE ``mesh`` turns on tensor-parallel
+sharded serving as a first-class mode: params, cache, batch and token
+placement all follow ``sharding/rules.py`` and the stored programs carry
+explicit in/out shardings.
 """
 
 from __future__ import annotations
@@ -23,10 +32,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import Mesh
+
 from repro.core.plan import BucketGrid, Problem, bucket_for, buckets_for, \
     length_buckets_for
 from repro.core.tsmm import prepack_for
 from repro.serve.clock import StepCost, ensure_clock
+from repro.serve.programs import ProgramStore
 from repro.models.param import is_axes_leaf
 from repro.sharding.context import sharding_ctx
 from repro.sharding.rules import ShardingOptions, axis_size, pspec_for
@@ -217,21 +229,23 @@ class Engine:
                  mesh=None, opts: Optional[ShardingOptions] = None,
                  prepack: bool = True, background_tune: bool = False,
                  tuner_opts: Optional[dict] = None,
+                 program_cache=None,
                  clock=None, step_cost: Optional[StepCost] = None):
         if max_batch is None:
             max_batch = batch_size
         self.model = model
         self.mesh = mesh
         self.opts = opts or ShardingOptions()
+        # sharded serving is a first-class mode, gated on a CONCRETE mesh
+        # (an AbstractMesh still shapes packing divisors / lowering, but
+        # there is nothing to place arrays on)
+        self.sharded = (isinstance(mesh, Mesh)
+                        and getattr(mesh, "devices", None) is not None)
         # clock seam (DESIGN.md §12): every serving-path time read goes
         # through here; a VirtualClock makes telemetry deterministic (the
         # engine/scheduler charge step_cost instead of measuring)
         self.clock = ensure_clock(clock)
         self.step_cost = step_cost or StepCost()
-        # programs (keyed by kind + shape) this engine has already run
-        # once — the scheduler uses it to split first-invocation jit time
-        # out of its throughput telemetry (SchedulerStats.compile_s)
-        self._warm_programs: set = set()
         self.tuner: Optional[_BackgroundTuner] = None
         if background_tune:
             # close the measure -> model -> plan loop: trace-time misses
@@ -270,18 +284,50 @@ class Engine:
             self.pack_report = report
         else:
             self.pack_report = {}
+        self.axes = axes
+        param_sh = None
+        if self.sharded:
+            from repro.sharding.rules import param_shardings
+            param_sh = param_shardings(axes, params, mesh, self.opts)
+            params = jax.device_put(params, param_sh)
         self.params = params
-        # jax.jit specializes per input shape, so these two wrappers hold
-        # one compiled prefill/decode executable per bucket, all closing
-        # over the same packed param tree; revisiting a bucket never
-        # recompiles.
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
-        # ragged admission into a live cache (None for families without an
-        # attention cache): one program per length bucket, any slot/clock
-        self._prefill_row = (jax.jit(model.prefill_row, donate_argnums=(2,))
-                             if model.prefill_row is not None else None)
+        # the program store replaces the old per-bucket jax.jit wrappers:
+        # every (kind, bucket, shape) program is AOT-lowered once, kept
+        # warm in memory and persisted on disk, so an engine restarted
+        # against an `install --precompile`d cache traces NOTHING
+        self.programs = ProgramStore(model, mesh=mesh, opts=self.opts,
+                                     param_shardings=param_sh,
+                                     cache_dir=program_cache)
         self._drain_misses()
+
+    # -- placement (sharded mode) ---------------------------------------
+
+    def new_cache(self, batch_size: int):
+        """A fresh decode cache, placed on the mesh in sharded mode."""
+        return self.place_cache(self.model.init_cache(batch_size,
+                                                      self.max_len))
+
+    def place_cache(self, cache):
+        if not self.sharded:
+            return cache
+        return self.programs.place(cache, self.programs.cache_shardings(cache))
+
+    def place_batch(self, batch):
+        if not self.sharded:
+            return batch
+        return self.programs.place(batch, self.programs.batch_shardings(batch))
+
+    def place_tokens(self, tok):
+        if not self.sharded:
+            return tok
+        return self.programs.place(tok, self.programs.tokens_sharding(tok))
+
+    def place_scalar(self, x):
+        if not self.sharded:
+            return x
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
 
     def _stamp_report(self, field: int) -> dict:
         """Walk every PackedTensor's ``kernel_specs`` stamp and map
@@ -379,46 +425,53 @@ class Engine:
         b = batch["tokens"].shape[0]
         bucket = self.bucket_of(b)
         batch = self._pad_group(batch, b, bucket)
-        # first invocation of a (bucket, prompt-shape) program is trace +
-        # compile + run: attribute it to compile_s (same split the
-        # continuous scheduler reports) so throughput stays warm-honest
-        pkey = ("prefill", bucket, batch["tokens"].shape[-1])
-        dkey = ("decode", bucket, 1)
-        cold_p = pkey not in self._warm_programs
-        cold_d = dkey not in self._warm_programs
+        width = batch["tokens"].shape[-1]
         compile_s = 0.0
         from repro.core.linear import serving_ctx
         with serving_ctx(), sharding_ctx(self.mesh, self.opts):
-            cache = self.model.init_cache(bucket, self.max_len)
+            cache = self.new_cache(bucket)
+            batch = self.place_batch(batch)
+            # a cold (bucket, prompt-shape) program acquire is AOT
+            # lower+compile — or a disk-cache deserialize — inside the
+            # timed window, so compile_s keeps the same meaning the lazy
+            # jit wrappers gave it and throughput stays warm-honest
             t0 = clock.now()
+            pprog = self.programs.program(
+                "prefill", (self.params, batch, cache),
+                bucket=bucket, tokens=width)
             logits, cache = jax.block_until_ready(
-                self._prefill(self.params, batch, cache))
+                pprog.fn(self.params, batch, cache))
             if clock.virtual:
-                if cold_p:
+                if pprog.cold:
                     clock.advance(self.step_cost.compile_s)
-                clock.advance(self.step_cost.prefill_s(
-                    bucket * batch["tokens"].shape[-1]))
+                clock.advance(self.step_cost.prefill_s(bucket * width))
             t1 = clock.now()
-            if cold_p:
+            if pprog.cold:
                 compile_s += t1 - t0
-                self._warm_programs.add(pkey)
             toks = []
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            tok = self.place_tokens(
+                jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32))
+            dprog = None
             for i in range(steps):
                 toks.append(tok)
-                if i == 0 and cold_d:
+                if i == 0:
                     td = clock.now()
-                    logits, cache = self._decode(self.params, cache, tok)
-                    jax.block_until_ready(logits)
-                    if clock.virtual:
-                        clock.advance(self.step_cost.compile_s)
-                    compile_s += clock.now() - td
-                    self._warm_programs.add(dkey)
+                    dprog = self.programs.program(
+                        "decode", (self.params, cache, tok),
+                        bucket=bucket, tokens=1)
+                    logits, cache = dprog.fn(self.params, cache, tok)
+                    if dprog.cold:
+                        jax.block_until_ready(logits)
+                        if clock.virtual:
+                            clock.advance(self.step_cost.compile_s)
+                        compile_s += clock.now() - td
                 else:
-                    logits, cache = self._decode(self.params, cache, tok)
+                    logits, cache = dprog.fn(self.params, cache, tok)
                 if clock.virtual:
                     clock.advance(self.step_cost.decode_step_s)
-                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+                tok = self.place_tokens(
+                    jnp.argmax(logits[:, -1], axis=-1)[:, None]
+                    .astype(jnp.int32))
             jax.block_until_ready(tok)
             t2 = clock.now()
         self._drain_misses()

@@ -54,6 +54,19 @@ from repro.sharding.context import sharding_ctx
 
 log = logging.getLogger(__name__)
 
+# Telemetry-growth bound for per-priority tier stats; override with
+# REPRO_TIER_STATS_MAX (mirrors REPRO_MEASURE_CACHE_MAX).
+TIER_STATS_MAX_DEFAULT = 64
+
+
+def tier_stats_max() -> int:
+    import os
+    try:
+        return int(os.environ.get("REPRO_TIER_STATS_MAX",
+                                  TIER_STATS_MAX_DEFAULT))
+    except ValueError:
+        return TIER_STATS_MAX_DEFAULT
+
 
 @dataclasses.dataclass
 class Request:
@@ -156,12 +169,17 @@ class SchedulerStats:
     # per-(batch, length-bucket) programs, split OUT of the throughput
     # telemetry: a cold run used to report compile time as token time
     compile_s: float = 0.0
-    # per-priority-tier telemetry (populated when requests carry tiers)
+    # per-priority-tier telemetry (populated when requests carry tiers).
+    # Bounded: an adversarial/buggy client minting a fresh priority per
+    # request must not grow this dict forever (same policy as the
+    # registry's measurement cache) — oldest tier evicts first.
     tiers: dict = dataclasses.field(default_factory=dict)
 
     def tier(self, priority: int) -> TierStats:
         ts = self.tiers.get(priority)
         if ts is None:
+            while len(self.tiers) >= tier_stats_max():
+                self.tiers.pop(next(iter(self.tiers)))
             ts = self.tiers[priority] = TierStats()
         return ts
 
@@ -287,7 +305,12 @@ class ContinuousScheduler:
         cache["pos"] = jnp.asarray(self.T, jnp.int32)
         # idle rows attend to nothing until a stream is admitted
         cache["valid_from"] = jnp.full((B,), eng.max_len, jnp.int32)
-        self.cache = cache
+        self.cache = eng.place_cache(cache)
+        # program handles acquired this open(): argument structure per
+        # (kind, length-bucket) is invariant for a given slot pool, so
+        # re-acquiring (and re-hashing every arg tree) per step would be
+        # pure overhead — hold the handle, charge compile once per store
+        self._progs: dict = {}
         self.active = {}
         self.free = list(range(B))
         self.feed = np.zeros((B,), np.int32)  # next token fed per row
@@ -355,23 +378,28 @@ class ContinuousScheduler:
         p = toks.shape[0]
         padded = np.zeros((lb,), np.int32)
         padded[lb - p:] = toks
-        batch = {"tokens": jnp.asarray(padded)[None],
-                 "pad": jnp.asarray([lb - p], jnp.int32)}
-        # first use of this (slots, length-bucket) program: attribute its
-        # trace+compile time to compile_s, not to serving throughput
-        pkey = ("prefill_row", self.slots, lb)
-        cold = pkey not in eng._warm_programs
-        if cold:
-            tc0 = clock.now()
-        logits, self.cache = eng._prefill_row(
-            eng.params, batch, self.cache,
-            jnp.asarray(row, jnp.int32), jnp.asarray(self.T, jnp.int32))
+        batch = eng.place_batch(
+            {"tokens": jnp.asarray(padded)[None],
+             "pad": jnp.asarray([lb - p], jnp.int32)})
+        row_arg = eng.place_scalar(jnp.asarray(row, jnp.int32))
+        t_arg = eng.place_scalar(jnp.asarray(self.T, jnp.int32))
+        args = (eng.params, batch, self.cache, row_arg, t_arg)
+        # first store acquire of this (slots, length-bucket) program:
+        # attribute its AOT compile (or disk-load) time to compile_s, not
+        # to serving throughput
+        tc0 = clock.now()
+        prog, cold = self._progs.get(("prefill_row", lb)), False
+        if prog is None:
+            prog = eng.programs.program("prefill_row", args,
+                                        bucket=self.slots, tokens=lb)
+            self._progs[("prefill_row", lb)] = prog
+            cold = prog.cold
+        logits, self.cache = prog.fn(*args)
         if cold:
             jax.block_until_ready(logits)
             if clock.virtual:
                 clock.advance(self.step_cost.compile_s)
             stats.compile_s += clock.now() - tc0
-            eng._warm_programs.add(pkey)
         if clock.virtual:
             clock.advance(self.step_cost.prefill_s(lb))
         first = int(jnp.argmax(logits[0, -1]))
@@ -404,18 +432,21 @@ class ContinuousScheduler:
         Returns ``(emitted, finished)`` event lists (see class doc)."""
         assert self._opened and self.active, "no live streams to step"
         eng, stats, clock = self.engine, self.stats, self.clock
-        dkey = ("decode", self.slots, 1)
-        cold = dkey not in eng._warm_programs
-        if cold:
-            tc0 = clock.now()
-        logits, self.cache = eng._decode(eng.params, self.cache,
-                                         jnp.asarray(self.feed[:, None]))
+        tok = eng.place_tokens(jnp.asarray(self.feed[:, None]))
+        tc0 = clock.now()
+        prog, cold = self._progs.get("decode"), False
+        if prog is None:
+            prog = eng.programs.program("decode",
+                                        (eng.params, self.cache, tok),
+                                        bucket=self.slots, tokens=1)
+            self._progs["decode"] = prog
+            cold = prog.cold
+        logits, self.cache = prog.fn(eng.params, self.cache, tok)
         if cold:
             jax.block_until_ready(logits)
             if clock.virtual:
                 clock.advance(self.step_cost.compile_s)
             stats.compile_s += clock.now() - tc0
-            eng._warm_programs.add(dkey)
         if clock.virtual:
             clock.advance(self.step_cost.decode_step_s)
         self.T += 1

@@ -151,6 +151,56 @@ def param_shardings(axes_tree, shapes_tree, mesh: Mesh, opts: ShardingOptions):
 
 
 # ---------------------------------------------------------------------------
+# Cache specs (serving KV / SSM state placement)
+# ---------------------------------------------------------------------------
+
+# logical axes per decode-cache leaf (leading "dense{i}_" prefixes strip to
+# the base name; hybrid stacks add a leading 'groups' dim).  Lives here —
+# with the param rules — so the serving engine and the dry-run launcher
+# place caches identically (DESIGN.md §13).
+CACHE_AXES = {
+    "pos": (),
+    "slot_pos": (None,),
+    # cache_seq: falls back to the model axis when kvheads can't take it
+    # (GQA kv < tp) — the sequence-sharded KV cache for long-context decode.
+    # cache_batch: dp-sharded even under serve_2d_tp (compute-path batch
+    # replication must not blow up cache residency).
+    "k": ("layers", "cache_batch", "cache_seq", "kvheads", "headdim"),
+    "v": ("layers", "cache_batch", "cache_seq", "kvheads", "headdim"),
+    "c": ("layers", "cache_batch", "cache_seq", "lora"),
+    "kr": ("layers", "cache_batch", "cache_seq", "rope"),
+    "ssm": ("layers", "cache_batch", "ssm_heads", "headdim", "state"),
+    "conv": ("layers", "cache_batch", "conv", "ssm_inner"),
+    "cross_k": ("layers", "cache_batch", "seq", "kvheads", "headdim"),
+    "cross_v": ("layers", "cache_batch", "seq", "kvheads", "headdim"),
+}
+
+
+def cache_axes_for(cfg, key: str, ndim: int):
+    base = key
+    if key.startswith("dense") and "_" in key:
+        base = key.split("_", 1)[1]
+    ax = CACHE_AXES.get(base)
+    if ax is None:
+        return (None,) * ndim
+    if len(ax) == ndim:
+        return ax
+    if len(ax) == ndim - 1:          # hybrid: extra leading 'groups' dim
+        return ("groups",) + ax
+    if len(ax) == ndim + 1:          # dense{i}_* lack the layer dim
+        return ax[1:]
+    return (None,) * ndim
+
+
+def cache_pspecs(cfg, cache, mesh: Mesh, opts: ShardingOptions) -> dict:
+    """PartitionSpec per decode-cache leaf (arrays or structs)."""
+    from repro.sharding.context import ShardCtx  # lazy: context imports rules
+    ctx = ShardCtx(mesh, opts)
+    return {key: ctx.spec_for(cache_axes_for(cfg, key, leaf.ndim), leaf.shape)
+            for key, leaf in cache.items()}
+
+
+# ---------------------------------------------------------------------------
 # Activation specs
 # ---------------------------------------------------------------------------
 

@@ -4,6 +4,7 @@ import os
 # separate process; see src/repro/launch/dryrun.py).  Keep plan-cache IO
 # out of $HOME during tests.
 os.environ.setdefault("REPRO_PLAN_CACHE", "/tmp/repro_test_plans.json")
+os.environ.setdefault("REPRO_PROGRAM_CACHE", "/tmp/repro_test_programs")
 
 import jax
 

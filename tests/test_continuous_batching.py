@@ -15,6 +15,12 @@ from repro.serve.engine import Engine
 from repro.serve.scheduler import ContinuousScheduler, Request
 
 
+def _n_programs(eng, kind):
+    """Stored programs of one kind — the no-recompile contract counter
+    (replaces the old jit _cache_size() probes)."""
+    return sum(1 for p in eng.programs.report() if p["kind"] == kind)
+
+
 # ---------------------------------------------------------------------------
 # grid helpers
 # ---------------------------------------------------------------------------
@@ -96,12 +102,12 @@ def test_uniform_groups_share_the_length_bucket_program(f32_model):
         assert len(outs) == 2
         all_outs[n] = outs
     # raw lengths 9/11/13 all share the ONE masked (2, lb=16) program
-    assert eng._prefill._cache_size() == 1
+    assert _n_programs(eng, "prefill") == 1
     # an exact-bucket group skips the pad vector (keeps the TPU flash
     # path) -> its own program, still per-bucket not per-raw-length
     all_outs[16] = eng.serve([{"tokens": _prompt(16, seed=16)},
                               {"tokens": _prompt(16, seed=17)}], steps=2)
-    assert eng._prefill._cache_size() == 2
+    assert _n_programs(eng, "prefill") == 2
     for n, outs in all_outs.items():
         ref = eng.generate({"tokens": _prompt(n, seed=n)[None]}, steps=2)
         np.testing.assert_array_equal(np.asarray(outs[0].tokens),
@@ -235,17 +241,17 @@ def test_scheduler_no_recompile_once_warm(f32_model):
     eng = Engine(model, params, axes, max_len=128, max_batch=2, prepack=False)
     reqs = [Request(tokens=_prompt(n, seed=n), max_new_tokens=2, rid=n)
             for n in (3, 9, 14, 30)]         # buckets 8, 16, 16, 32
-    before = eng._prefill_row._cache_size()
+    before = _n_programs(eng, "prefill_row")
     eng.serve_queue(reqs)
-    n_prefill = eng._prefill_row._cache_size()
-    n_decode = eng._decode._cache_size()
+    n_prefill = _n_programs(eng, "prefill_row")
+    n_decode = _n_programs(eng, "decode")
     # one program per length bucket hit (8, 16, 32), any slot/clock
     assert n_prefill - before == 3
     reqs2 = [Request(tokens=_prompt(n, seed=n + 50), max_new_tokens=3,
                      rid=n) for n in (5, 11, 25, 16, 2)]
     eng.serve_queue(reqs2)
-    assert eng._prefill_row._cache_size() == n_prefill
-    assert eng._decode._cache_size() == n_decode
+    assert _n_programs(eng, "prefill_row") == n_prefill
+    assert _n_programs(eng, "decode") == n_decode
 
 
 def test_scheduler_rejects_unsupported_families(f32_model):

@@ -134,3 +134,34 @@ def test_measurement_cache_two_writers_merge(cache_file, tmp_path,
     registry.clear_memory()
     assert registry.lookup_measurement(rec_b.plan) == rec_b
     assert len(registry.measurements()) == 2
+
+
+def test_miss_log_bounded(cache_file, monkeypatch):
+    """The pending miss log evicts oldest-first at the cap: an engine
+    with no background tuner attached (never drains) cannot grow it
+    without bound (DESIGN.md §13 telemetry-growth rules)."""
+    monkeypatch.setenv("REPRO_MISS_LOG_MAX", "5")
+    registry.clear_memory()
+    for m in range(8):
+        registry.get(f"m{m}_k4096_n128_bf16")     # all miss
+    missed = registry.drain_misses()
+    assert len(missed) == 5                       # capped
+    assert missed[0] == "m3_k4096_n128_bf16"      # oldest three evicted
+    assert missed[-1] == "m7_k4096_n128_bf16"     # freshest kept
+    assert registry.stats()["misses"] == 8        # telemetry still exact
+    registry.clear_memory()
+
+
+def test_tier_stats_bounded(monkeypatch):
+    """SchedulerStats per-priority tiers evict oldest-first at the cap
+    (a client minting a fresh priority per request must not leak)."""
+    from repro.serve.scheduler import SchedulerStats
+    monkeypatch.setenv("REPRO_TIER_STATS_MAX", "4")
+    stats = SchedulerStats(slots=2)
+    for prio in range(10):
+        stats.tier(prio).admitted += 1
+    assert len(stats.tiers) == 4
+    assert sorted(stats.tiers) == [6, 7, 8, 9]    # freshest tiers kept
+    # re-touching a live tier does not evict
+    stats.tier(9).completed += 1
+    assert sorted(stats.tiers) == [6, 7, 8, 9]
