@@ -1,25 +1,40 @@
 """Paper Fig. 8 / §IV-B — install-time inner-kernel selection over the
-kernel-VARIANT registry (DESIGN.md §10).
+kernel-synthesis grammar (DESIGN.md §10, §14).
 
 The paper benchmarks competing register-blocked inner kernels (12x8 vs
-16x4 vs 8x4) and keeps the best.  Here the candidates are whole kernel
-schedules: every registered variant (baseline accumulate, k-split partial
-sums, k-major loop order, B-resident, split epilogue, pack-on-the-fly),
-each at its model-best block shape for the gate problem.  Per gate shape
-we print a per-variant timing table and report which variant the
-(optionally calibrated) predictive model picks vs which one the
-measurement picks — the agreement signal the install stage's adaptive
-short-list search relies on.
+16x4 vs 8x4) and keeps the best.  Here the candidate family is GENERATED:
+per gate shape the pre-grammar hand-seeded variants (baseline, k-split,
+k-major, B-resident, split epilogue, pack-on-the-fly — each at its
+model-best block shape) race the tuner's prune->tournament pick over the
+full grammar enumeration.  The tournament measures the model-ranked
+grammar short list TOGETHER with the hand-seeded plans in one
+interleaved pass (cached-record reuse, exactly the install-time search),
+so the generated-vs-hand-seeded comparison is apples-to-apples — and the
+acceptance assertions run inline:
+
+* the enumerable grammar space is >= 4x the hand-seeded variant list;
+* the tuner's pick is never slower than the hand-seeded winner (the
+  tournament's candidate superset contains every hand-seeded plan, so a
+  regression here means the measurement itself is broken).
+
+``--json`` writes ``benchmarks/artifacts/BENCH_8.json`` in the shared
+BENCH_*.json schema for the CI artifact trail.
 """
 
 from __future__ import annotations
 
+import argparse
+from pathlib import Path
+
 from repro.core.autotuner import candidate_blocks
-from repro.core.evaluator import build_callable, calibrated_hw
+from repro.core.evaluator import calibrated_hw, measure_plans_interleaved
 from repro.core.hw import TPU_V5E
 from repro.core.plan import Problem
+from repro.kernels.variants import specs_for
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, write_bench_json
+
+DEFAULT_JSON = Path(__file__).resolve().parent / "artifacts" / "BENCH_8.json"
 
 # the gate shapes: paper-style tall-A prefill panels + a decode-style
 # skinny-A projection
@@ -29,56 +44,112 @@ GATE_PROBLEMS = [
     Problem(64, 2048, 4096, "float32"),
 ]
 
+# the closed hand-seeded candidate list the grammar replaced (PR 4):
+# tall [baseline, ksplit2, kmajor, b_resident], skinny [baseline,
+# ksplit2, epilogue_split, fused_pack] — the 4x floor is against this
+PRE_GRAMMAR_VARIANTS = 4
 
-def best_per_variant(problem, hw):
-    """Model-best plan for EVERY registered variant spec: candidates come
-    back score-sorted, so the first plan seen per spec is its best block
-    config under the model."""
+TOP_K = 8          # tuner short list: model-ranked grammar candidates
+
+
+def hand_seeded_plans(cands) -> dict:
+    """Model-best plan per LEGACY-named spec: candidates come back
+    score-sorted, so the first plan seen per spec is its best block
+    config under the model — the pre-grammar comparison set."""
     best = {}
-    for plan in candidate_blocks(problem, hw):
-        key = plan.kernel.key()
-        if key not in best:
-            best[key] = plan
+    for plan in cands:
+        if plan.kernel.name == "gen":
+            continue
+        best.setdefault(plan.kernel.key(), plan)
     return best
 
 
-def run():
+def run(json_path=None):
     hw = calibrated_hw(TPU_V5E)   # datasheet roofline when the cache is thin
     mode = "calibrated" if hw.calibrated else "datasheet"
-    rows = []
+    report, summary, failed = [], [], 0
     for prob in GATE_PROBLEMS:
-        per_variant = best_per_variant(prob, hw)
-        if not per_variant:
-            continue
-        model_pick = min(per_variant.values(), key=lambda p: p.score)
-        timed = []
-        for key, plan in sorted(per_variant.items()):
-            t = timeit(build_callable(plan, impl="xla"), warmup=1, iters=3)
-            timed.append((t, key, plan))
-        timed.sort(key=lambda x: x[0])
-        meas_pick = timed[0][1]
+        try:
+            cands = candidate_blocks(prob, hw)
+            if not cands:
+                continue
+            orientation = cands[0].orientation
+            space = specs_for(orientation,
+                              prepack=(orientation == "tall_a"))
+            assert len(space) >= 4 * PRE_GRAMMAR_VARIANTS, \
+                (f"grammar space for {orientation} is {len(space)}, "
+                 f"< 4x the hand-seeded list ({PRE_GRAMMAR_VARIANTS})")
 
-        print(f"\n== {prob.key()} ({mode} model) ==")
-        print(f"{'variant':22s} {'blocks':>18s} {'model_s':>10s} "
-              f"{'measured_s':>11s}")
-        for t, key, plan in timed:
-            mark = []
-            if key == model_pick.kernel.key():
-                mark.append("model-pick")
-            if key == meas_pick:
-                mark.append("measured-pick")
-            print(f"{key:22s} ({plan.bm:5d},{plan.bk:5d},{plan.bn:5d}) "
-                  f"{plan.score:10.3e} {t:11.3e}  {' '.join(mark)}")
+            legacy = hand_seeded_plans(cands)
+            union, seen = [], set()
+            for plan in list(legacy.values()) + cands[:TOP_K]:
+                tk = plan.tuning_key()
+                if tk not in seen:
+                    seen.add(tk)
+                    union.append(plan)
+            recs = measure_plans_interleaved(union, impl="xla", rounds=3,
+                                             warmup=1, source="benchmark")
+            timed = sorted(zip(union, recs), key=lambda pr: pr[1].seconds)
 
-        agree = model_pick.kernel.key() == meas_pick
-        rows.append((
-            f"kernel_select_{prob.key()}",
-            round(timed[0][0] * 1e6, 1),
-            f"variants={len(per_variant)}|model_pick={model_pick.kernel.key()}"
-            f"|measured_pick={meas_pick}|top1_agree={agree}"))
+            legacy_keys = {p.tuning_key() for p in legacy.values()}
+            hand_best = min((r for p, r in timed
+                             if p.tuning_key() in legacy_keys),
+                            key=lambda r: r.seconds)
+            tuner_pick = timed[0][1]     # min over the measured superset
+            assert tuner_pick.seconds <= hand_best.seconds, \
+                "tournament pick slower than a plan inside its own superset"
+
+            print(f"\n== {prob.key()} ({mode} model, "
+                  f"grammar space {len(space)}) ==")
+            print(f"{'candidate':34s} {'blocks':>18s} {'model_s':>10s} "
+                  f"{'measured_s':>11s}")
+            rows = []
+            for plan, rec in timed:
+                origin = ("hand-seeded" if plan.tuning_key() in legacy_keys
+                          else "generated")
+                mark = " <- tuner-pick" if rec is tuner_pick else ""
+                print(f"{plan.kernel.key():34s} ({plan.bm:5d},{plan.bk:5d},"
+                      f"{plan.bn:5d}) {plan.score:10.3e} "
+                      f"{rec.seconds:11.3e}  {origin}{mark}")
+                rows.append((plan.kernel.key(),
+                             round(rec.seconds * 1e6, 2),
+                             f"{origin}|blocks=({plan.bm},{plan.bk},"
+                             f"{plan.bn})|model_s={plan.score:.3e}"))
+            report.append((f"kernel_select_{prob.key()}", rows))
+
+            speedup = hand_best.seconds / max(tuner_pick.seconds, 1e-12)
+            summary.append((
+                f"tuner_pick_{prob.key()}",
+                round(tuner_pick.seconds * 1e6, 2),
+                f"pick={tuner_pick.plan.kernel.key()}"
+                f"|hand_best={hand_best.plan.kernel.key()}"
+                f"|speedup_vs_hand={speedup:.3f}"
+                f"|never_slower={tuner_pick.seconds <= hand_best.seconds}"
+                f"|grammar_space={len(space)}"
+                f"|space_growth={len(space) / PRE_GRAMMAR_VARIANTS:.1f}x"))
+        except Exception as e:   # a failed gate shape must not hide others
+            failed += 1
+            summary.append((f"FAILED_{prob.key()}", 0.0,
+                            f"{type(e).__name__}: {e}"))
+    report.append(("generated_vs_hand_seeded", summary))
     print()
-    return emit(rows)
+    emit(summary)
+    if json_path:
+        out = write_bench_json(json_path, "BENCH_8", report, failed=failed)
+        print(f"wrote {out}")
+    if failed:
+        raise SystemExit(f"{failed} gate shape(s) failed")
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const=str(DEFAULT_JSON),
+                    default=None,
+                    help="write rows as BENCH_8.json (run.py schema)")
+    args = ap.parse_args(argv)
+    run(json_path=args.json)
 
 
 if __name__ == "__main__":
-    run()
+    main()

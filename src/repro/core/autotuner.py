@@ -66,13 +66,15 @@ def candidate_blocks(problem: Problem,
                      hw: Optional[HwSpec] = None) -> list[Plan]:
     """Enumerate feasible candidate plans for one problem.
 
-    The search space is the cross product of block shapes x registered
-    kernel variants (kernels/variants, DESIGN.md §10) x grid schedules
-    (DESIGN.md §11) — the paper's install-time selection among competing
-    inner kernels AND among partitionings/pipelinings of each kernel.
-    Candidates are model-ranked; the measured short-list then times
-    whichever variants/schedules survive the prune."""
-    from repro.kernels.variants import specs_for  # lazy: seeds the registry
+    The search space is the cross product of block shapes x the kernel
+    synthesis grammar's enumerable points (kernels/variants/grammar,
+    DESIGN.md §10, §14) x grid schedules (DESIGN.md §11) — the paper's
+    install-time selection among competing inner kernels AND among
+    partitionings/pipelinings of each kernel, with the kernel family now
+    GENERATED rather than hand-registered.  Candidates are model-ranked
+    (the calibrated predictive model is the prune); the measured
+    tournament then times whichever grammar points/schedules survive."""
+    from repro.kernels.variants import specs_for  # lazy: jax-free grammar
     hw = hw or default_hw()
     orientation = "tall_a" if problem.skinny_dim == "n" else "skinny_a"
     sl = hw.sublane.get(problem.dtype, 8)
@@ -98,9 +100,9 @@ def candidate_blocks(problem: Problem,
                     continue
                 cands.append(Plan(problem, "skinny_a", bm=problem.m, bk=bk, bn=bn))
 
-    # kernel-variant axis: every block candidate x every registered spec
-    # applicable to its (orientation, prepack); baseline-first spec order
-    # keeps ties deterministic under the stable sort below
+    # kernel axis: every block candidate x every grammar point emittable
+    # for its (orientation, prepack); baseline-first spec order keeps
+    # ties deterministic under the stable sort below
     expanded = []
     for c in cands:
         for spec in specs_for(c.orientation, c.prepack):
@@ -117,12 +119,12 @@ def candidate_blocks(problem: Problem,
             for spec in specs_for("skinny_a", prepack=False):
                 expanded.append(dataclasses.replace(cf, kernel=spec))
 
-    # grid-schedule axis (DESIGN.md §11): every (block, variant) candidate
+    # grid-schedule axis (DESIGN.md §11): every (block, point) candidate
     # x every schedule its kernel supports — default-schedule first per
     # candidate, so ties under the stable sort keep pre-schedule behavior
     scheduled = []
     for c in expanded:
-        for sched in schedules_for(c.orientation, c.kernel.name):
+        for sched in schedules_for(c.orientation, c.kernel):
             scheduled.append(
                 c if sched.is_default
                 else dataclasses.replace(c, schedule=sched))
@@ -132,11 +134,42 @@ def candidate_blocks(problem: Problem,
     return out
 
 
+def _transfer_candidates(problem: Problem, hw: HwSpec,
+                         reg=None) -> list[Plan]:
+    """Winner-transfer warm start (DESIGN.md §14): the measured winners
+    of the NEIGHBORING bucket shapes (m/2 and 2m, same k/n/dtype), rebased
+    onto this problem.  Tall-and-skinny winners are stable across the
+    token-bucket ladder far more often than not, so seeding the
+    tournament with them lets a transferred champion win in one
+    measurement instead of re-searching the grammar from scratch.  Only
+    MEASURED neighbors transfer (a model-ranked neighbor adds nothing the
+    model prune doesn't already know); infeasible rebases are dropped."""
+    reg = reg if reg is not None else registry.default()
+    out = []
+    for m2 in (problem.m // 2, problem.m * 2):
+        if m2 < 1 or m2 == problem.m:
+            continue
+        near = registry.get(dataclasses.replace(problem, m=m2).key())
+        if near is None or near.chosen_by != "measured":
+            continue
+        cand = dataclasses.replace(
+            near, problem=problem, chosen_by="model", score=0.0,
+            t_compute=0.0, t_memory=0.0)
+        if cand.orientation == "skinny_a":
+            cand = dataclasses.replace(cand, bm=problem.m)
+        if feasible(cand, hw):
+            out.append(predict(cand, hw))
+    return out
+
+
 def _measure_short_list(cands: list, *, top_k: int, stable: int,
                         iters: int, warmup: int) -> Plan:
-    """Adaptive evaluator stage (DESIGN.md §9): measure the model-ranked
-    short-list in order, reusing cached records, and stop once the
-    wall-clock leader has beaten ``stable`` challengers in a row."""
+    """Tournament evaluator stage (DESIGN.md §9, §14): the model-ranked
+    short-list is measured in order — cached records replay for free —
+    with the wall-clock leader defending against each challenger; the
+    tournament ends once the leader has beaten ``stable`` challengers in
+    a row (the grammar makes the full space too large to time, so the
+    calibrated model prunes and the stopwatch arbitrates the rest)."""
     from repro.core.evaluator import measure_plan  # lazy: avoids cycle
     reg = registry.default()
     best, best_rec, streak, tried = None, None, 0, 0
@@ -195,7 +228,16 @@ def make_plan(
         return registry.put(plan, persist=persist)
 
     if measure == "wallclock":
-        best = _measure_short_list(cands, top_k=top_k, stable=stable,
+        # seed the tournament with measured winners transferred from the
+        # neighboring bucket shapes (warm start), then the model ranking
+        short = _transfer_candidates(problem, hw) + cands
+        seen, deduped = set(), []
+        for c in short:
+            tk = c.tuning_key()
+            if tk not in seen:
+                seen.add(tk)
+                deduped.append(c)
+        best = _measure_short_list(deduped, top_k=top_k, stable=stable,
                                    iters=iters, warmup=warmup)
     else:
         best = cands[0]

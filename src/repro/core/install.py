@@ -299,10 +299,12 @@ def main(argv=None):
             sys.exit(1)
         print(f"check ok: {stats['hits']} lookups, all hits "
               f"-> {cache_path()}")
-        # kernel-variant self-check (DESIGN.md §10): run EVERY registered
-        # variant in interpret mode on one tiny shape — an unloadable or
-        # numerically broken variant must fail the workflow before a
-        # tuned registry can ever point serving at it.
+        # kernel-grammar self-check (DESIGN.md §10/§14): run a sampled
+        # sweep of the synthesis grammar — every legacy-equivalent point
+        # plus strided novel points — in interpret mode on one tiny
+        # shape: an unemittable or numerically broken grammar point must
+        # fail the workflow before a tuned registry can ever point
+        # serving at it.
         from repro.kernels.variants import verify_variants
         rows = verify_variants(impl="pallas_interpret")
         bad = [r for r in rows if not r["ok"]]
@@ -313,7 +315,7 @@ def main(argv=None):
             print(f"CHECK FAILED: {len(bad)}/{len(rows)} kernel variants "
                   f"broken")
             sys.exit(1)
-        print(f"variant check ok: {len(rows)} registered variant entries "
+        print(f"variant check ok: {len(rows)} sampled grammar points "
               f"verified in interpret mode")
         # grid-schedule self-check (DESIGN.md §11): every enumerable
         # schedule x every variant it applies to, in interpret mode —

@@ -145,16 +145,20 @@ def parse_schedule(text: str) -> ScheduleSpec:
     return ScheduleSpec(**fields)
 
 
-def schedules_for(orientation: str, kernel_name: str = "baseline") -> list:
+def schedules_for(orientation: str, kernel="baseline") -> list:
     """Every ScheduleSpec the autotuner enumerates for one
     (orientation, kernel variant) — the schedule dimension of the search
     space, default first (ties under the stable score sort keep the
-    pre-schedule behavior).  Only knobs that change the EXECUTED program
-    are enumerated: ``m_split`` always (it changes the grid),
+    pre-schedule behavior).  ``kernel`` is a KernelSpec or a bare variant
+    name.  Only knobs that change the EXECUTED program are enumerated:
+    ``m_split`` for the named M-partitionable kernels (it changes the
+    grid; novel ``gen`` grammar points keep the default schedule — their
+    structure axes already span the space m_split would re-cover),
     ``multibuffer`` only when the Pallas API can express it
     (``MULTIBUFFER_EXPRESSIBLE``); ``dims`` overrides never (a
     debugging knob via ``REPRO_TSMM_SCHEDULE``).  Infeasible combos are
     pruned by ``vmem_model.feasible``, not here."""
+    kernel_name = getattr(kernel, "name", kernel)
     out = [DEFAULT_SCHEDULE]
     if kernel_name in FIXED_SCHEDULE_KERNELS:
         return out
@@ -269,6 +273,14 @@ class Plan:
         if not self.schedule.is_default:
             base += f"_sch:{self.schedule.key()}"
         return base
+
+    def gen_spec(self):
+        """This plan's kernel decoded to its grammar point (DESIGN.md
+        §14) — legacy variant names resolve to their equivalent GenSpec,
+        so pre-grammar plans ride the generated emitters unchanged.
+        Raises ValueError for a spec outside the grammar."""
+        from repro.kernels.variants.grammar import from_kernel_spec
+        return from_kernel_spec(self.kernel)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)

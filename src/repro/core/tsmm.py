@@ -264,8 +264,13 @@ def _stamp_spec_for_blocks(plan: Plan, bk: int, bn: int, *,
     hw = hw or default_hw()
     spec, sched = plan.kernel, plan.schedule
     if not spec.is_baseline:
-        entry = variants.get_variant(spec.name).orientations.get("skinny_a")
-        if entry is None or entry.requires_prepack is False:
+        try:
+            g = variants.from_kernel_spec(spec)
+        except ValueError:
+            g = None
+        if g is None or not variants.grammar.valid(g, "skinny_a", True):
+            # not emittable against a prepacked skinny weight (tall-only
+            # point, or a pack-fusing point with no per-call pack left)
             spec = KernelSpec()
     trial = dataclasses.replace(plan, bk=bk, bn=bn, prepack=True,
                                 kernel=spec)

@@ -14,6 +14,14 @@ TPU analogue of the paper's FMA-instruction-ratio argument for choosing
 12x8 over 16x4: a (bm,bk)x(bk,n) step only uses n/128 of the systolic
 array's output columns, so skinny-n TSMM is intrinsically bandwidth-bound
 (arithmetic intensity ~ n) and the model optimizes DMA traffic first.
+
+Since the generator refactor (DESIGN.md §14) the kernel dimension of the
+model is the synthesis grammar, not a per-variant name switch: every term
+below reads the plan's :class:`~repro.kernels.variants.grammar.GenSpec`
+fields (loop order, k-split factor, accumulator residency, operand
+residency, epilogue placement, pack fusion), so ANY grammar point —
+legacy-named or novel — prices identically to the hand-written kernel it
+generalizes, and a new grammar axis extends the model in one place.
 """
 
 from __future__ import annotations
@@ -21,8 +29,9 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.hw import TPU_V5E, VMEM_USABLE_FRACTION, HwSpec, dtype_bytes
-from repro.core.plan import (FIXED_SCHEDULE_KERNELS, M_SPLIT_KERNELS,
-                             SEMANTICS, Plan, Problem)
+from repro.core.plan import SEMANTICS, Plan, Problem
+from repro.kernels.variants import grammar
+from repro.kernels.variants.grammar import GenSpec, from_kernel_spec
 
 # The per-contraction-step overhead (DMA issue + semaphores) lives on
 # ``HwSpec.grid_overhead_s`` so the calibration pass (DESIGN.md §9) can
@@ -41,35 +50,37 @@ def _ceil(a, b):
     return -(-a // b)
 
 
-def _variant(plan: Plan) -> tuple:
-    """(variant name, params) — the kernel dimension of the cost model
-    (DESIGN.md §10)."""
-    return plan.kernel.name, dict(plan.kernel.params)
+def _gen(plan: Plan) -> GenSpec:
+    """The plan's grammar point — the kernel dimension of the cost model
+    (DESIGN.md §10, §14).  Raises ValueError for an undecodable spec
+    (:func:`feasible` turns that into infeasibility)."""
+    return from_kernel_spec(plan.kernel)
 
 
 def contraction_steps(plan: Plan) -> int:
-    """SERIAL k-axis steps the variant's schedule executes — the unit the
-    fitted per-step overhead multiplies (``HwSpec.grid_overhead_s``).
-    A k-split runs its partial sums in parallel, so each chain is
-    ``nk / splits`` long; every other variant walks all nk blocks."""
+    """SERIAL k-axis steps the plan's grammar point executes — the unit
+    the fitted per-step overhead multiplies (``HwSpec.grid_overhead_s``).
+    A k-split point runs its partial sums in parallel, so each chain is
+    ``nk / ksplit`` long; every other point walks all nk blocks."""
     nk = plan.grid[1]
-    name, params = _variant(plan)
-    if name == "ksplit":
-        return max(1, nk // max(1, params.get("splits", 2)))
+    g = _gen(plan)
+    if g.ksplit > 1:
+        return max(1, nk // g.ksplit)
     return nk
 
 
 def grid_rank(plan: Plan) -> int:
-    """Rank of the Pallas grid the plan's (variant, schedule) launches —
-    what a ``dims`` override must match to apply (DESIGN.md §11)."""
-    name, _ = _variant(plan)
-    if name == "ksplit":
-        return 3
-    if plan.orientation == "tall_a" and name == "kmajor":
-        return 1          # fori_loop of single-axis row-panel passes
+    """Rank of the Pallas grid the plan's (grammar point, schedule)
+    launches — what a ``dims`` override must match to apply
+    (DESIGN.md §11)."""
+    g = _gen(plan)
+    if g.ksplit > 1:
+        return 3              # (panel, split, k-within-split)
+    if plan.orientation == "tall_a" and g.loop == "kouter":
+        return 1              # fori_loop of single-axis row-panel passes
     base = 2
     if plan.orientation == "tall_a" and plan.schedule.m_split > 1:
-        base += 1         # the extra leading M-partition parallel axis
+        base += 1             # the extra leading M-partition parallel axis
     return base
 
 
@@ -97,14 +108,15 @@ def vmem_bytes_needed(plan: Plan, hw: HwSpec = TPU_V5E) -> int:
     """Working set of one grid step, with ``schedule.multibuffer``-deep
     buffering on the streamed k-loop operands (2 = the classic double
     buffering the pre-schedule model assumed) and a single fp32
-    accumulator (the Pallas pipeline's actual residency).  Variant-aware:
-    ``b_resident`` holds the WHOLE skinny operand (never swapped, so no
-    multibuffering on it), ``kmajor`` trades the VMEM accumulator for an
-    fp32 output block, and the k-split variants stream fp32 partial
-    blocks out."""
+    accumulator (the Pallas pipeline's actual residency).  Grammar-aware:
+    ``bres=resident`` holds the WHOLE streamed operand (never swapped, so
+    no multibuffering on it), ``acc=revisit`` trades the VMEM scratch
+    accumulator for an fp32 output block, ``loop=kouter`` additionally
+    streams that fp32 block back in as an aliased input, and k-split
+    points stream fp32 partial blocks out."""
     p = plan.problem
     eb = dtype_bytes(p.dtype)
-    name, _ = _variant(plan)
+    g = _gen(plan)
     mb = max(plan.schedule.multibuffer, 2)
     if plan.orientation == "tall_a":
         n_pad = _ceil(p.n, 128) * 128
@@ -112,16 +124,19 @@ def vmem_bytes_needed(plan: Plan, hw: HwSpec = TPU_V5E) -> int:
         b = mb * plan.bk * n_pad * eb
         acc = plan.bm * n_pad * 4
         out = 2 * plan.bm * n_pad * eb
-        if name == "b_resident":
-            b = _ceil(p.k, plan.bk) * plan.bk * n_pad * eb   # full B, once
-        elif name == "kmajor":
+        if g.loop == "kouter":
             # no VMEM scratch, but the aliased fp32 accumulator streams
             # through as BOTH an input block and the output block
             # (input_output_aliases shares HBM, not the VMEM windows)
             acc = 2 * plan.bm * n_pad * 4
             out = 2 * plan.bm * n_pad * 4
-        elif name == "ksplit":
-            out = 2 * plan.bm * n_pad * 4                    # fp32 partials
+        elif g.ksplit > 1:
+            out = 2 * plan.bm * n_pad * 4                   # fp32 partials
+        elif g.acc == "revisit":
+            acc = 0                                         # o_ref IS it
+            out = 2 * plan.bm * n_pad * 4
+        if g.bres == "resident":
+            b = _ceil(p.k, plan.bk) * plan.bk * n_pad * eb  # full B, once
     else:  # skinny_a
         sl = hw.sublane.get(p.dtype, 8)
         m_pad = _ceil(p.m, sl) * sl
@@ -129,8 +144,13 @@ def vmem_bytes_needed(plan: Plan, hw: HwSpec = TPU_V5E) -> int:
         b = mb * plan.bk * plan.bn * eb       # streamed W block
         acc = m_pad * plan.bn * 4
         out = 2 * m_pad * plan.bn * eb
-        if name == "ksplit":
-            out = 2 * m_pad * plan.bn * 4                    # fp32 partials
+        if g.ksplit > 1:
+            out = 2 * m_pad * plan.bn * 4                   # fp32 partials
+        elif g.acc == "revisit":
+            acc = 0
+            out = 2 * m_pad * plan.bn * 4
+        if g.bres == "resident":
+            a = m_pad * _ceil(p.k, plan.bk) * plan.bk * eb  # full X, once
     return a + b + acc + out
 
 
@@ -144,25 +164,32 @@ def feasible(plan: Plan, hw: HwSpec = TPU_V5E) -> bool:
     sl = hw.sublane.get(p.dtype, 8)
     if plan.orientation == "tall_a" and plan.bm % sl:
         return False
-    name, params = _variant(plan)
-    if name == "ksplit":
+    try:
+        g = _gen(plan)
+    except ValueError:
+        return False          # undecodable spec (unknown name/axis/value)
+    # the grammar's structural + orientation rules gate the whole point
+    # (kouter is tall-A only, pack fusion needs an unpacked weight, ...)
+    if not grammar.valid(g, plan.orientation, plan.prepack):
+        return False
+    if g.ksplit > 1:
         # the split must cut the k-block count evenly into >= 2 chains,
         # or the schedule degenerates to the baseline
-        splits = params.get("splits", 2)
-        nk = plan.grid[1]
-        if splits < 2 or nk % splits or nk // splits < 1:
+        if plan.grid[1] % g.ksplit:
             return False
     # grid-schedule gates (DESIGN.md §11)
     sched = plan.schedule
     if sched.m_split < 1 or not 2 <= sched.multibuffer <= 4:
         return False
-    if name in FIXED_SCHEDULE_KERNELS and not sched.is_default:
-        return False            # no streamed-operand pipeline to re-schedule
+    if g.loop == "kouter" and not sched.is_default:
+        return False          # no streamed-operand pipeline to re-schedule
     if sched.m_split > 1:
-        # M partitioning: tall-A only, supporting kernels only, and the
-        # partition count must cut the row-panel axis evenly (a ragged
-        # partition would replay a different program than was tuned)
-        if plan.orientation != "tall_a" or name not in M_SPLIT_KERNELS:
+        # M partitioning: tall-A only, k-inner unsplit points only (the
+        # row-panel axis must be the leading parallel grid axis), and the
+        # partition count must cut it evenly (a ragged partition would
+        # replay a different program than was tuned)
+        if plan.orientation != "tall_a" or g.loop != "kinner" \
+                or g.ksplit > 1:
             return False
         if plan.grid[0] % sched.m_split:
             return False
@@ -177,9 +204,10 @@ def feasible(plan: Plan, hw: HwSpec = TPU_V5E) -> bool:
 def epilogue_roundtrip_bytes(plan: Plan) -> int:
     """HBM bytes of a POST-HOC bias/activation epilogue: one extra read +
     write of the full (padded) output.  This is the traffic the fused
-    tall-A epilogues delete (DESIGN.md §11) — the fusion credit the
-    model grants every fused plan, and what ``hbm_traffic_bytes(...,
-    epilogue='posthoc')`` charges the pre-fusion behavior."""
+    epilogues delete (DESIGN.md §11) — the fusion credit the model grants
+    every fused plan, what an ``epi=split`` grammar point pays back, and
+    what ``hbm_traffic_bytes(..., epilogue='posthoc')`` charges the
+    pre-fusion behavior."""
     p = plan.problem
     eb = dtype_bytes(p.dtype)
     if plan.orientation == "tall_a":
@@ -194,18 +222,21 @@ def epilogue_roundtrip_bytes(plan: Plan) -> int:
 def hbm_traffic_bytes(plan: Plan, *, epilogue: str = "fused") -> int:
     """Total HBM bytes moved by one execution of the plan.
 
-    Variant-aware (DESIGN.md §10): the kernel dimension of the search
-    space changes WHERE bytes move, and these per-variant terms are what
-    ``fit_hw`` calibrates through (they flow into the memory-seconds
+    Grammar-aware (DESIGN.md §10, §14): the kernel dimension of the
+    search space changes WHERE bytes move, and these per-axis terms are
+    what ``fit_hw`` calibrates through (they flow into the memory-seconds
     regressor of :func:`features`):
 
-    * ``ksplit`` streams fp32 partials out and reads them back for the
+    * ``ksplit>1`` streams fp32 partials out and reads them back for the
       fused reduction (the k-split reduction traffic);
-    * ``kmajor`` fetches each B panel ONCE per k step but revisits the
-      fp32 output every step;
-    * ``b_resident`` loads B exactly once (no per-row-panel reload);
-    * ``fused_pack`` skips the per-call pack of a prepack=False skinny
-      weight (2x the weight bytes) that every re-packing variant pays;
+    * ``loop=kouter`` fetches each B panel ONCE per k step but revisits
+      the fp32 output every step; a k-inner ``acc=revisit`` point writes
+      the fp32 output once per panel then pays the final cast pass;
+    * ``bres=resident`` loads the streamed operand exactly once;
+    * ``epi=split`` pays one extra read+write pass over the output
+      (the post-hoc epilogue priced INTO the point itself);
+    * ``packfuse`` skips the per-call pack of a prepack=False skinny
+      weight (2x the weight bytes) that every re-packing point pays;
     * pre-pack traffic of a ``prepack=True`` operand stays a one-time
       cost amortized over reuse (paper Eq.7) and is NOT counted here.
 
@@ -216,36 +247,45 @@ def hbm_traffic_bytes(plan: Plan, *, epilogue: str = "fused") -> int:
     benchmarks can quote the fusion credit)."""
     p = plan.problem
     eb = dtype_bytes(p.dtype)
-    name, params = _variant(plan)
+    g = _gen(plan)
     if plan.orientation == "tall_a":
         nm, nk = _ceil(p.m, plan.bm), _ceil(p.k, plan.bk)
         n_pad = _ceil(p.n, 128) * 128
         a = nm * nk * plan.bm * plan.bk * eb              # each A block once
         b = nm * nk * plan.bk * n_pad * eb                # B reloaded per row
-        c = nm * plan.bm * n_pad * eb
-        if name == "ksplit":
-            splits = max(1, params.get("splits", 2))
-            parts = splits * nm * plan.bm * n_pad * 4
-            c = 2 * parts + nm * plan.bm * n_pad * eb     # write+read partials,
-        elif name == "kmajor":                            # write final
+        out_eb = nm * plan.bm * n_pad * eb
+        c = out_eb
+        if g.loop == "kouter":
             b = nk * plan.bk * n_pad * eb                 # B once per k step
             c = ((2 * nk - 1) * nm * plan.bm * n_pad * 4  # fp32 revisits
                  + nm * plan.bm * n_pad * (4 + eb))       # final cast pass
-        elif name == "b_resident":
+        elif g.ksplit > 1:
+            parts = g.ksplit * nm * plan.bm * n_pad * 4
+            c = 2 * parts + out_eb        # write+read partials, write final
+        elif g.acc == "revisit":
+            c = (nm * plan.bm * n_pad * 4                 # fp32 output once
+                 + nm * plan.bm * n_pad * (4 + eb))       # final cast pass
+        if g.bres == "resident":
             b = nk * plan.bk * n_pad * eb                 # B loaded once
+        if g.epi == "split":
+            c += 2 * out_eb                               # post-hoc pass
     else:
         nn, nk = _ceil(p.n, plan.bn), _ceil(p.k, plan.bk)
         m_pad = max(p.m, 8)
         a = nn * nk * m_pad * plan.bk * eb                # X reloaded per col
         b = nn * nk * plan.bk * plan.bn * eb              # each W block once
-        c = nn * m_pad * plan.bn * eb
-        if name == "ksplit":
-            splits = max(1, params.get("splits", 2))
-            parts = splits * m_pad * nn * plan.bn * 4
-            c = 2 * parts + nn * m_pad * plan.bn * eb
-        elif name == "epilogue_split":
-            c = 3 * nn * m_pad * plan.bn * eb             # extra read+write pass
-        if not plan.prepack and name != "fused_pack":
+        out_eb = nn * m_pad * plan.bn * eb
+        c = out_eb
+        if g.ksplit > 1:
+            parts = g.ksplit * m_pad * nn * plan.bn * 4
+            c = 2 * parts + out_eb
+        elif g.acc == "revisit":
+            c = nn * m_pad * plan.bn * 4 + nn * m_pad * plan.bn * (4 + eb)
+        if g.bres == "resident":
+            a = m_pad * _ceil(p.k, plan.bk) * plan.bk * eb
+        if g.epi == "split":
+            c += 2 * out_eb                               # extra output pass
+        if not plan.prepack and not g.packfuse:
             # a prepack=False skinny plan re-packs the weight every call
             # (tsmm_dot replay fidelity, DESIGN.md §9): read + write W
             b += 2 * nk * plan.bk * nn * plan.bn * eb
@@ -291,7 +331,7 @@ def predict(plan: Plan, hw: HwSpec = TPU_V5E) -> Plan:
 
     The overhead term counts SERIAL contraction steps
     (:func:`contraction_steps` — the k-axis, divided by the split factor
-    for k-split variants): output-tile steps pipeline against the operand
+    for k-split points): output-tile steps pipeline against the operand
     DMAs, but every extra k-block serializes another partial-sum
     accumulation (on the XLA fallback, another pass over the fp32
     accumulator) — measurements show the k-split, not the output split,
@@ -305,7 +345,8 @@ def predict(plan: Plan, hw: HwSpec = TPU_V5E) -> Plan:
     The overhead count is schedule-aware (:func:`overhead_steps`):
     deeper multibuffering hides per-step DMA-issue latency, each extra
     M partition adds a per-partition launch overhead — so grid geometry
-    ranks in the same units as blocks and variants (DESIGN.md §11)."""
+    ranks in the same units as blocks and grammar points
+    (DESIGN.md §11)."""
     t_c = compute_time_s(plan, hw)
     t_m = memory_time_s(plan, hw)
     steps = overhead_steps(plan)

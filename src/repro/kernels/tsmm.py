@@ -258,210 +258,15 @@ def pack_blocks_kernel(a, bm: int, bk: int, *, alpha: float = 1.0,
 
 
 # ---------------------------------------------------------------------------
-# 2c. tall-A variant kernels (the inner-kernel family the autotuner
-#     selects among — see kernels/variants/; DESIGN.md §10)
+# 2c. shared helpers for the generated variant kernels (kernels/gen.py —
+#     the parameterized emitters the autotuner's grammar search lowers
+#     through; DESIGN.md §14)
 # ---------------------------------------------------------------------------
 
 
 def _blk(ref, packed: bool):
     """A/W operand block: packed block-major refs carry (1, 1, b0, b1)."""
     return ref[0, 0] if packed else ref[...]
-
-
-def _tall_ksplit_kernel(a_ref, b_ref, o_ref, acc_ref, *, nki, packed):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(
-        _blk(a_ref, packed), b_ref[...], preferred_element_type=jnp.float32
-    )
-
-    @pl.when(pl.program_id(2) == nki - 1)
-    def _done():
-        o_ref[0] = acc_ref[...]
-
-
-def tsmm_tall_a_ksplit(a, b, *, bm: int = 0, bk: int = 0, splits: int = 2,
-                       packed: bool = False, interpret: bool = False,
-                       dims=()):
-    """k-split tall-A: the contraction axis is cut into ``splits``
-    independent partial sums (one grid dim), each accumulated in VMEM and
-    written as an fp32 partial; the caller's ``sum(axis=0)`` is the fused
-    reduction (same jit program).  Returns fp32 partials (splits, M, N).
-
-    ``splits`` must divide the k-block count (the wrapper in
-    ``kernels.variants.tall`` clamps it to a divisor)."""
-    if packed:
-        nm, nk, bm, bk = a.shape
-        m = nm * bm
-    else:
-        m, k = a.shape
-        assert m % bm == 0 and k % bk == 0, (a.shape, bm, bk)
-        nm, nk = m // bm, k // bk
-    n = b.shape[1]
-    assert nk % splits == 0, (nk, splits)
-    nki = nk // splits
-    if packed:
-        a_spec = pl.BlockSpec((1, 1, bm, bk),
-                              lambda i, s, j: (i, s * nki + j, 0, 0))
-    else:
-        a_spec = pl.BlockSpec((bm, bk), lambda i, s, j: (i, s * nki + j))
-    return pl.pallas_call(
-        functools.partial(_tall_ksplit_kernel, nki=nki, packed=packed),
-        grid=(nm, splits, nki),
-        in_specs=[
-            a_spec,
-            pl.BlockSpec((bk, n), lambda i, s, j: (s * nki + j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bm, n), lambda i, s, j: (s, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((splits, m, n), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=_compiler_params(
-            _semantics(dims, ("parallel", "parallel", "arbitrary"))),
-        interpret=interpret,
-    )(a, b)
-
-
-def _kmajor_step_kernel(a_ref, b_ref, acc_ref, o_ref, *, packed):
-    o_ref[...] = acc_ref[...] + jnp.dot(
-        _blk(a_ref, packed), b_ref[...], preferred_element_type=jnp.float32
-    )
-
-
-def tsmm_tall_a_kmajor(a, b, *, bm: int = 0, bk: int = 0,
-                       packed: bool = False, interpret: bool = False,
-                       dims=()):
-    """k-outermost loop order: each k step sweeps every output row panel,
-    accumulating into an fp32 output revisited in HBM.  B's k-block is
-    fetched ONCE per k step (vs once per row panel in the baseline) at
-    the cost of output-revisit traffic — a genuinely different point on
-    the traffic/residency tradeoff.  Returns fp32 (M, N); caller casts.
-
-    The k loop lives at the XLA level (``fori_loop`` of single-k-slice
-    Pallas passes with an aliased fp32 accumulator) rather than as an
-    outer grid dimension: a Pallas output block only persists across
-    CONSECUTIVE grid steps, so a (nk, nm) grid revisiting block ``i`` at
-    non-adjacent steps would read stale VMEM on real TPU.  Each pass here
-    visits every output block exactly once — well-defined everywhere —
-    while keeping the schedule's traffic shape."""
-    if packed:
-        nm, nk, bm, bk = a.shape
-        m = nm * bm
-    else:
-        m, k = a.shape
-        assert m % bm == 0 and k % bk == 0, (a.shape, bm, bk)
-        nm, nk = m // bm, k // bk
-    n = b.shape[1]
-    if packed:
-        a_spec = pl.BlockSpec((1, 1, bm, bk), lambda i: (i, 0, 0, 0))
-    else:
-        a_spec = pl.BlockSpec((bm, bk), lambda i: (i, 0))
-    call = pl.pallas_call(
-        functools.partial(_kmajor_step_kernel, packed=packed),
-        grid=(nm,),
-        in_specs=[
-            a_spec,
-            pl.BlockSpec((bk, n), lambda i: (0, 0)),
-            pl.BlockSpec((bm, n), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        input_output_aliases={2: 0},
-        compiler_params=_compiler_params(_semantics(dims, ("arbitrary",))),
-        interpret=interpret,
-    )
-
-    def step(j, acc):
-        if packed:
-            a_j = jax.lax.dynamic_slice(a, (0, j, 0, 0), (nm, 1, bm, bk))
-        else:
-            a_j = jax.lax.dynamic_slice(a, (0, j * bk), (m, bk))
-        b_j = jax.lax.dynamic_slice(b, (j * bk, 0), (bk, n))
-        return call(a_j, b_j, acc)
-
-    return jax.lax.fori_loop(0, nk, step, jnp.zeros((m, n), jnp.float32))
-
-
-def _tall_bres_kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, nk, bk,
-                      k_axis, packed, act):
-    j = pl.program_id(k_axis)
-
-    @pl.when(j == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(
-        _blk(a_ref, packed), b_ref[pl.ds(j * bk, bk), :],
-        preferred_element_type=jnp.float32,
-    )
-
-    @pl.when(j == nk - 1)
-    def _done():
-        o_ref[...] = _epilogue(acc_ref[...], bias_ref, act).astype(o_ref.dtype)
-
-
-def _tall_bres_kernel_nobias(a_ref, b_ref, o_ref, acc_ref, *, nk, bk, k_axis,
-                             packed, act):
-    _tall_bres_kernel(a_ref, b_ref, None, o_ref, acc_ref, nk=nk, bk=bk,
-                      k_axis=k_axis, packed=packed, act=act)
-
-
-def tsmm_tall_a_bres(a, b, bias=None, *, bm: int = 0, bk: int = 0, act=None,
-                     packed: bool = False, interpret: bool = False,
-                     dims=(), m_split: int = 1):
-    """B-resident tall-A: the WHOLE skinny operand (K, N) is held in VMEM
-    for the kernel's lifetime (constant index map -> fetched once), and
-    each grid step dynamic-slices its k panel.  Removes the baseline's
-    per-row-panel B reload traffic; only feasible while K*N fits VMEM
-    (the vmem model enforces that per variant).  Epilogue fused into the
-    final k step; ``m_split`` partitions the row-panel axis."""
-    if packed:
-        nm, nk, bm, bk = a.shape
-        m = nm * bm
-        k = nk * bk
-    else:
-        m, k = a.shape
-        assert m % bm == 0 and k % bk == 0, (a.shape, bm, bk)
-        nm, nk = m // bm, k // bk
-    assert b.shape[0] == k, (a.shape, b.shape)
-    n = b.shape[1]
-    grid, k_axis, row, default = _tall_grid(nm, nk, m_split)
-    if row is None:
-        a_spec = (pl.BlockSpec((1, 1, bm, bk), lambda i, j: (i, j, 0, 0))
-                  if packed else pl.BlockSpec((bm, bk), lambda i, j: (i, j)))
-        b_spec = pl.BlockSpec((k, n), lambda i, j: (0, 0))
-        o_spec = pl.BlockSpec((bm, n), lambda i, j: (i, 0))
-        bias_spec = pl.BlockSpec((n,), lambda i, j: (0,))
-    else:
-        a_spec = (pl.BlockSpec((1, 1, bm, bk),
-                               lambda p, i, j: (row(p, i), j, 0, 0))
-                  if packed else
-                  pl.BlockSpec((bm, bk), lambda p, i, j: (row(p, i), j)))
-        b_spec = pl.BlockSpec((k, n), lambda p, i, j: (0, 0))
-        o_spec = pl.BlockSpec((bm, n), lambda p, i, j: (row(p, i), 0))
-        bias_spec = pl.BlockSpec((n,), lambda p, i, j: (0,))
-    in_specs = [a_spec, b_spec]
-    args = [a, b]
-    if bias is not None:
-        assert bias.shape == (n,), (bias.shape, n)
-        in_specs.append(bias_spec)
-        args.append(bias)
-        kernel = functools.partial(_tall_bres_kernel, nk=nk, bk=bk,
-                                   k_axis=k_axis, packed=packed, act=act)
-    else:
-        kernel = functools.partial(_tall_bres_kernel_nobias, nk=nk, bk=bk,
-                                   k_axis=k_axis, packed=packed, act=act)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=o_spec,
-        out_shape=jax.ShapeDtypeStruct((m, n), b.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
-        compiler_params=_compiler_params(_semantics(dims, default)),
-        interpret=interpret,
-    )(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -510,118 +315,6 @@ def tsmm_skinny_a(x, wp, bias=None, *, act=None, interpret: bool = False,
         kernel = functools.partial(_skinny_a_kernel, nk=nk, act=act)
     else:
         kernel = functools.partial(_skinny_a_kernel_nobias, nk=nk, act=act)
-    return pl.pallas_call(
-        kernel,
-        grid=(nn, nk),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((m, bn), lambda i, j: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
-        scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
-        compiler_params=_compiler_params(
-            _semantics(dims, ("parallel", "arbitrary"))),
-        interpret=interpret,
-    )(*args)
-
-
-# ---------------------------------------------------------------------------
-# 3b. skinny-A variant kernels (kernels/variants/skinny.py wrappers)
-# ---------------------------------------------------------------------------
-
-
-def _skinny_ksplit_kernel(x_ref, w_ref, o_ref, acc_ref, *, nki, packed):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(
-        x_ref[...], _blk(w_ref, packed), preferred_element_type=jnp.float32
-    )
-
-    @pl.when(pl.program_id(2) == nki - 1)
-    def _done():
-        o_ref[0] = acc_ref[...]
-
-
-def tsmm_skinny_a_ksplit(x, w, *, bk: int = 0, bn: int = 0, splits: int = 2,
-                         packed: bool = True, interpret: bool = False,
-                         dims=()):
-    """k-split skinny-A: partial sums over k splits, fp32 partials out
-    (splits, m, N); caller sums + applies the epilogue (fused reduction).
-    ``w`` is packed (nk, nn, bk, bn) when ``packed`` else natural (K, N).
-    """
-    m, k = x.shape
-    if packed:
-        nk, nn, bk, bn = w.shape
-    else:
-        kw, nw = w.shape
-        assert kw % bk == 0 and nw % bn == 0, (w.shape, bk, bn)
-        nk, nn = kw // bk, nw // bn
-    assert k == nk * bk, (x.shape, w.shape if packed else (bk, bn))
-    n = nn * bn
-    assert nk % splits == 0, (nk, splits)
-    nki = nk // splits
-    if packed:
-        w_spec = pl.BlockSpec((1, 1, bk, bn),
-                              lambda i, s, j: (s * nki + j, i, 0, 0))
-    else:
-        w_spec = pl.BlockSpec((bk, bn), lambda i, s, j: (s * nki + j, i))
-    return pl.pallas_call(
-        functools.partial(_skinny_ksplit_kernel, nki=nki, packed=packed),
-        grid=(nn, splits, nki),
-        in_specs=[
-            pl.BlockSpec((m, bk), lambda i, s, j: (0, s * nki + j)),
-            w_spec,
-        ],
-        out_specs=pl.BlockSpec((1, m, bn), lambda i, s, j: (s, 0, i)),
-        out_shape=jax.ShapeDtypeStruct((splits, m, n), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
-        compiler_params=_compiler_params(
-            _semantics(dims, ("parallel", "parallel", "arbitrary"))),
-        interpret=interpret,
-    )(x, w)
-
-
-def _skinny_natural_kernel(x_ref, w_ref, bias_ref, o_ref, acc_ref, *, nk, act):
-    @pl.when(pl.program_id(1) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
-    )
-
-    @pl.when(pl.program_id(1) == nk - 1)
-    def _done():
-        o_ref[...] = _epilogue(acc_ref[...], bias_ref, act).astype(o_ref.dtype)
-
-
-def _skinny_natural_kernel_nobias(x_ref, w_ref, o_ref, acc_ref, *, nk, act):
-    _skinny_natural_kernel(x_ref, w_ref, None, o_ref, acc_ref, nk=nk, act=act)
-
-
-def tsmm_skinny_a_natural(x, w, bias=None, *, bk: int, bn: int, act=None,
-                          interpret: bool = False, dims=()):
-    """Pack-on-the-fly skinny-A: W is read in its NATURAL (K, N) layout —
-    each grid step DMAs a strided (bk, bn) tile straight out of the
-    unpacked weight and fuses the epilogue, so prepack=False shapes skip
-    the separate per-call pack pass entirely (pack + compute in one
-    kernel)."""
-    m, k = x.shape
-    kw, n = w.shape
-    assert k == kw and k % bk == 0 and n % bn == 0, (x.shape, w.shape, bk, bn)
-    nk, nn = k // bk, n // bn
-    in_specs = [
-        pl.BlockSpec((m, bk), lambda i, j: (0, j)),
-        pl.BlockSpec((bk, bn), lambda i, j: (j, i)),
-    ]
-    args = [x, w]
-    if bias is not None:
-        assert bias.shape == (n,), (bias.shape, n)
-        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (i,)))
-        args.append(bias)
-        kernel = functools.partial(_skinny_natural_kernel, nk=nk, act=act)
-    else:
-        kernel = functools.partial(_skinny_natural_kernel_nobias, nk=nk, act=act)
     return pl.pallas_call(
         kernel,
         grid=(nn, nk),

@@ -1,24 +1,30 @@
-"""Kernel-variant specs + the variant registry (jax-free).
+"""Kernel-variant specs over the synthesis grammar (jax-free).
 
 The paper's install-time stage selects among *competing inner kernels*,
 not just block sizes.  A :class:`KernelSpec` names one member of that
-family (variant name + variant-specific parameters) and rides on
-``core.plan.Plan`` as a first-class tuning axis: it round-trips through
-the plan registry's JSON, extends ``Plan.tuning_key`` (so the measurement
-cache never conflates two schedules), and the autotuner enumerates the
-cross product of variants x block shapes.
+family and rides on ``core.plan.Plan`` as a first-class tuning axis: it
+round-trips through the plan registry's JSON, extends ``Plan.tuning_key``
+(so the measurement cache never conflates two schedules), and the
+autotuner enumerates the cross product of variants x block shapes.
+
+Since the generator refactor (DESIGN.md §14) the variant family is no
+longer a closed registry of hand-written kernels: :func:`specs_for`
+renders ``variants.grammar.enumerate_points`` — every emittable
+:class:`~repro.kernels.variants.grammar.GenSpec` — to candidate specs.
+Points equivalent to a pre-grammar variant keep their legacy name
+(``ksplit[splits=2]``, ``kmajor``, ...) so old registry JSON and
+measurement-cache tuning keys keep resolving; novel points spell their
+non-default axes as ``gen[...]`` params.
 
 This module is import-light on purpose — ``core.plan`` imports it, so it
-must not drag jax in.  The actual Pallas kernel generators live in the
-sibling ``tall``/``skinny`` modules and self-register on import via
-:func:`register_variant`; :func:`_ensure_seeded` imports them lazily the
-first time anyone queries the registry.
+must not drag jax in.  The grammar module is equally jax-free; the Pallas
+emitters live in ``kernels.gen`` and load only when a spec is run.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Mapping, Optional
+from typing import Mapping, Optional
 
 BASELINE_NAME = "baseline"
 
@@ -68,138 +74,77 @@ class KernelSpec:
 BASELINE = KernelSpec()
 
 
+def _parse_value(v: str):
+    v = v.strip()
+    try:
+        return int(v)
+    except ValueError:
+        return v
+
+
 def parse_spec(text: str) -> KernelSpec:
     """Parse ``name`` / ``name:k=v,k2=v2`` (the ``REPRO_TSMM_VARIANT``
-    syntax).  Validates the name against the registry and raises with the
-    full variant list on a bad one."""
+    syntax).  Accepts both legacy variant names (``ksplit:splits=2``) and
+    raw grammar points (``gen:loop=kouter,acc=revisit``).  Raises with
+    the full variant list AND the grammar's axis/value/rule listing on a
+    bad name, axis, value, or rule violation."""
+    from repro.kernels.variants import grammar
+
     text = text.strip()
     name, _, rest = text.partition(":")
     name = name.strip()
-    if name not in _registry():
+    if name not in grammar.LEGACY_ORIENTATIONS:
         raise ValueError(
             f"unknown kernel variant {name!r}; registered variants: "
-            f"{', '.join(variant_names())}")
+            f"{', '.join(variant_names())}\n{grammar.describe_axes()}")
     params = {}
     for part in rest.split(","):
         part = part.strip()
         if not part:
             continue
         k, _, v = part.partition("=")
-        params[k.strip()] = int(v)
-    return KernelSpec.make(name, **params)
-
-
-# ---------------------------------------------------------------------------
-# registry
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class OrientationEntry:
-    """One variant's implementation for one regime (orientation)."""
-
-    fn: Callable                       # the parameterized kernel generator
-    param_grid: tuple = ()             # ((key, (values...)), ...) to enumerate
-    requires_prepack: Optional[bool] = None   # None = either
-    doc: str = ""
-
-
-@dataclasses.dataclass
-class VariantDef:
-    name: str
-    orientations: dict = dataclasses.field(default_factory=dict)
-
-    def entry(self, orientation: str) -> OrientationEntry:
-        try:
-            return self.orientations[orientation]
-        except KeyError:
-            raise ValueError(
-                f"kernel variant {self.name!r} has no {orientation!r} "
-                f"implementation (has: {sorted(self.orientations)})") from None
-
-
-_REGISTRY: dict = {}
-_SEEDED = False
-
-
-def _ensure_seeded() -> None:
-    """Import the built-in variant modules (they self-register).  Lazy so
-    importing ``core.plan`` (which only needs KernelSpec) stays light.
-    The flag flips only AFTER the imports succeed: a failed first seed
-    (broken backend, partial install) re-raises on every call instead of
-    silently leaving the registry empty forever."""
-    global _SEEDED
-    if _SEEDED:
-        return
-    from repro.kernels.variants import skinny, tall  # noqa: F401
-    _SEEDED = True
-
-
-def _registry() -> dict:
-    _ensure_seeded()
-    return _REGISTRY
-
-
-def register_variant(name: str, orientation: str, *,
-                     param_grid: Optional[Mapping] = None,
-                     requires_prepack: Optional[bool] = None,
-                     doc: str = ""):
-    """Decorator registering one kernel generator for (name, orientation).
-
-    The decorated callable is the variant's runner for that regime; a
-    variant spanning both regimes registers twice under the same name
-    (e.g. ``ksplit``).  ``param_grid`` maps param name -> candidate
-    values, enumerated by :func:`specs_for`;  ``requires_prepack`` gates
-    the variant to prepack=True/False plans (None = applicable to both).
-    """
-    grid = tuple(sorted((k, tuple(v)) for k, v in (param_grid or {}).items()))
-
-    def deco(fn):
-        vdef = _REGISTRY.setdefault(name, VariantDef(name))
-        if orientation in vdef.orientations:
-            raise ValueError(f"variant {name!r}/{orientation!r} registered twice")
-        d = doc or (fn.__doc__ or "").strip().split("\n", 1)[0]
-        vdef.orientations[orientation] = OrientationEntry(
-            fn=fn, param_grid=grid, requires_prepack=requires_prepack, doc=d)
-        return fn
-
-    return deco
-
-
-def get_variant(name: str) -> VariantDef:
-    reg = _registry()
-    try:
-        return reg[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown kernel variant {name!r}; registered variants: "
-            f"{', '.join(sorted(reg))}") from None
+        params[k.strip()] = _parse_value(v)
+    spec = KernelSpec.make(name, **params)
+    grammar.from_kernel_spec(spec)   # validates axes, values, and rules
+    return spec
 
 
 def variant_names() -> list:
-    return sorted(_registry())
-
-
-def _expand_grid(grid: tuple) -> list:
-    """Cross product of a ((key, values), ...) grid -> list of dicts."""
-    combos = [{}]
-    for key, values in grid:
-        combos = [{**c, key: v} for c in combos for v in values]
-    return combos
+    """Every spellable variant NAME: the legacy family plus the ``gen``
+    grammar namespace (sorted, for deterministic error listings)."""
+    from repro.kernels.variants import grammar
+    return sorted(grammar.LEGACY_ORIENTATIONS)
 
 
 def specs_for(orientation: str, prepack: bool = True) -> list:
-    """Every registered KernelSpec applicable to (orientation, prepack),
-    baseline first — the variant dimension of the autotuner's search
-    space.  Deterministic order (registry is sorted by name)."""
-    out = []
-    for name in sorted(_registry()):
-        entry = _REGISTRY[name].orientations.get(orientation)
-        if entry is None:
-            continue
-        if entry.requires_prepack is not None and entry.requires_prepack != prepack:
-            continue
-        for combo in _expand_grid(entry.param_grid):
-            out.append(KernelSpec.make(name, **combo))
-    out.sort(key=lambda s: (not s.is_baseline, s.key()))
+    """Every emittable KernelSpec for (orientation, prepack), baseline
+    first — the variant dimension of the autotuner's search space.
+    Rendered from the grammar enumeration, so the space grows with the
+    grammar rather than with hand-written registrations; deterministic
+    order (baseline, then legacy-named points, then ``gen[...]`` by
+    key)."""
+    from repro.kernels.variants import grammar
+    out = [grammar.to_kernel_spec(g, orientation)
+           for g in grammar.enumerate_points(orientation, prepack)]
+    out.sort(key=lambda s: (not s.is_baseline, s.name == "gen", s.key()))
     return out
+
+
+def legacy_specs_for(orientation: str, prepack: bool = True) -> list:
+    """The grammar points equivalent to a pre-grammar hand-written
+    variant (their specs keep the legacy names) — the back-compat subset
+    every parity/interpret check must always cover."""
+    return [s for s in specs_for(orientation, prepack) if s.name != "gen"]
+
+
+def sampled_specs_for(orientation: str, prepack: bool = True,
+                      stride: int = 5) -> list:
+    """Bounded deterministic sample of the grammar space: EVERY
+    legacy-equivalent point plus every ``stride``-th novel ``gen`` point.
+    Tier-1 tests parametrize over this (the full enumeration rides in
+    ``install --check``'s interpret sweep, where wall clock is budgeted
+    for it)."""
+    legacy, novel = [], []
+    for s in specs_for(orientation, prepack):
+        (legacy if s.name != "gen" else novel).append(s)
+    return legacy + novel[::max(1, stride)]

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels.variants import grammar as _grammar
 from repro.sharding.context import ShardCtx, sharding_ctx
 from repro.sharding.rules import ShardingOptions
 
@@ -193,8 +194,13 @@ class ProgramStore:
             self.cache_dir = Path(cache_dir) if cache_dir else program_cache_dir()
         self._fns = {"prefill": model.prefill, "decode": model.decode_step,
                      "prefill_row": model.prefill_row}
+        # the kernel-synthesis grammar version rides in the fingerprint:
+        # a grammar change can alter what any tuned plan lowers to, so
+        # every disk-cached executable must miss cleanly and recompile
+        # (DESIGN.md §14)
         self._fingerprint = (config_fingerprint(model.cfg)
-                             + code_fingerprint())
+                             + code_fingerprint()
+                             + _grammar.GRAMMAR_VERSION)
         self._programs: dict[str, Program] = {}
         self._stats = {"traced": 0, "from_disk": 0, "reused": 0,
                        "compile_s": 0.0, "load_s": 0.0}

@@ -1,0 +1,302 @@
+"""Kernel-synthesis grammar (DESIGN.md §14): the generated variant space.
+
+Covers the grammar <-> KernelSpec round trip (every legacy name resolves
+to its grammar point and renders back bit-identically), the 4x space
+growth over the hand-seeded PR-4 variant list, the ``REPRO_TSMM_VARIANT``
+grammar syntax (including the self-documenting axis listing on bad
+specs), pre-grammar plan/measurement cache back-compat with the measured
+provenance guard, and the tuner's winner-transfer warm start.
+"""
+
+import dataclasses
+import shutil
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.autotuner import (_transfer_candidates, candidate_blocks,
+                                  default_hw, make_plan)
+from repro.core.plan import Plan, Problem
+from repro.core.vmem_model import (contraction_steps, feasible, grid_rank,
+                                   hbm_traffic_bytes, predict,
+                                   vmem_bytes_needed)
+from repro.kernels import ops, ref
+from repro.kernels.variants import (GenSpec, KernelSpec, from_kernel_spec,
+                                    grammar, legacy_specs_for, parse_spec,
+                                    run_skinny_a, run_tall_a, specs_for,
+                                    to_kernel_spec)
+
+DATA = Path(__file__).parent / "data"
+RNG = np.random.default_rng(7)
+
+# the closed, hand-seeded variant lists the grammar replaced (PR 4)
+PRE_GRAMMAR_TALL = 4      # baseline, ksplit[2], kmajor, b_resident
+PRE_GRAMMAR_SKINNY = 4    # baseline, ksplit[2], epilogue_split, fused_pack
+
+
+@pytest.fixture
+def cache_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans.json"))
+    monkeypatch.setenv("REPRO_MEASURE_CACHE",
+                       str(tmp_path / "measurements.json"))
+    registry.clear_memory()
+    yield tmp_path
+    registry.clear_memory()
+
+
+def _mk(shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# grammar <-> KernelSpec round trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("orientation,prepack", [("tall_a", True),
+                                                 ("skinny_a", True),
+                                                 ("skinny_a", False)])
+def test_every_point_round_trips(orientation, prepack):
+    points = grammar.enumerate_points(orientation, prepack)
+    assert points[0] == grammar.BASELINE_POINT
+    seen = set()
+    for g in points:
+        spec = to_kernel_spec(g, orientation)
+        assert from_kernel_spec(spec) == g, spec.key()
+        assert spec.key() not in seen, f"ambiguous rendering {spec.key()}"
+        seen.add(spec.key())
+
+
+def test_legacy_names_map_to_expected_points():
+    want = {
+        "baseline": GenSpec(),
+        "kmajor": GenSpec(loop="kouter", acc="revisit"),
+        "b_resident": GenSpec(bres="resident"),
+        "epilogue_split": GenSpec(epi="split"),
+        "fused_pack": GenSpec(packfuse=True),
+    }
+    for name, g in want.items():
+        assert from_kernel_spec(KernelSpec(name)) == g
+    for splits in (2, 4, 8):
+        sp = KernelSpec.make("ksplit", splits=splits)
+        assert from_kernel_spec(sp) == GenSpec(ksplit=splits,
+                                               epi="postreduce")
+    # and the canonical rendering goes BACK to the legacy name
+    assert to_kernel_spec(want["kmajor"], "tall_a").key() == "kmajor"
+    assert to_kernel_spec(want["fused_pack"], "skinny_a").key() == \
+        "fused_pack"
+    assert to_kernel_spec(GenSpec(ksplit=2, epi="postreduce"),
+                          "tall_a").key() == "ksplit[splits=2]"
+
+
+def test_grammar_space_is_at_least_4x_the_hand_seeded_list():
+    assert len(specs_for("tall_a")) >= 4 * PRE_GRAMMAR_TALL
+    assert len(specs_for("skinny_a", prepack=False)) >= \
+        4 * PRE_GRAMMAR_SKINNY
+    # every legacy point is still in the enumeration (back-compat floor)
+    tall_names = {s.key() for s in specs_for("tall_a")}
+    assert {"baseline", "kmajor", "b_resident",
+            "ksplit[splits=2]"} <= tall_names
+    skinny_names = {s.key() for s in specs_for("skinny_a", prepack=False)}
+    assert {"baseline", "epilogue_split", "fused_pack",
+            "ksplit[splits=2]"} <= skinny_names
+
+
+def test_invalid_points_are_rejected():
+    bad = GenSpec(loop="kouter", ksplit=2)
+    assert grammar.violations(bad)
+    assert not grammar.valid(bad, "tall_a")
+    # kouter is tall-A only; packfuse needs an unpacked skinny weight
+    ok = GenSpec(loop="kouter", acc="revisit")
+    assert grammar.valid(ok, "tall_a") and not grammar.valid(ok, "skinny_a")
+    pf = GenSpec(packfuse=True)
+    assert grammar.valid(pf, "skinny_a", prepack=False)
+    assert not grammar.valid(pf, "skinny_a", prepack=True)
+    assert not grammar.valid(pf, "tall_a", prepack=False)
+
+
+# ---------------------------------------------------------------------------
+# REPRO_TSMM_VARIANT grammar syntax (satellite: parse_spec)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_spec_accepts_grammar_syntax():
+    spec = parse_spec("gen:loop=kouter,acc=revisit")
+    assert spec.name == "gen"
+    assert from_kernel_spec(spec) == GenSpec(loop="kouter", acc="revisit")
+    spec2 = parse_spec("gen:ksplit=2,epi=postreduce")
+    assert from_kernel_spec(spec2) == GenSpec(ksplit=2, epi="postreduce")
+    spec3 = parse_spec("gen:packfuse=1")
+    assert from_kernel_spec(spec3) == GenSpec(packfuse=True)
+    # legacy spellings still parse
+    assert parse_spec("ksplit:splits=4").key() == "ksplit[splits=4]"
+
+
+@pytest.mark.parametrize("text", ["warp_speed", "gen:zoom=2",
+                                  "gen:loop=diagonal",
+                                  "gen:loop=kouter,ksplit=2"])
+def test_parse_spec_errors_list_axes(text):
+    """Every bad spec — unknown name, unknown axis, bad value, or rule
+    violation — must name the registered variants or the offending part
+    AND append the full axis/value/rule listing."""
+    with pytest.raises(ValueError, match="grammar axes") as e:
+        parse_spec(text)
+    msg = str(e.value)
+    for axis in grammar.AXES:
+        assert axis in msg
+
+
+def test_gen_spelling_executes_and_matches_reference():
+    """A grammar point forced via the env-override syntax must run (the
+    emitter path, interpret mode) and match the jnp oracle."""
+    a, b = _mk((128, 512)), _mk((512, 8))
+    bias = _mk((8,))
+    want = np.asarray(ref.tsmm_ref(a, b, bias=bias, act="gelu"), np.float32)
+    for text in ("gen:loop=kouter,acc=revisit", "gen:acc=revisit,epi=split",
+                 "gen:bres=resident,epi=split"):
+        spec = parse_spec(text)
+        got = run_tall_a(spec, a, b, bias, "gelu", bm=64, bk=128,
+                         packed=False, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=2e-4, atol=2e-4, err_msg=text)
+    x, w = _mk((4, 512)), _mk((512, 256))
+    bias_s = _mk((256,))
+    want_s = np.asarray(ref.tsmm_ref(x, w, bias=bias_s), np.float32)
+    wp = ops.pack_blocks(w, 128, 128)
+    for text in ("gen:bres=resident", "gen:acc=revisit"):
+        spec = parse_spec(text)
+        got = run_skinny_a(spec, x, wp, bias_s, None, bk=128, bn=128,
+                           packed=True, impl="pallas_interpret")[:4, :256]
+        np.testing.assert_allclose(np.asarray(got, np.float32), want_s,
+                                   rtol=2e-4, atol=2e-4, err_msg=text)
+
+
+# ---------------------------------------------------------------------------
+# cost model: gen spelling prices exactly like its legacy twin
+# ---------------------------------------------------------------------------
+
+
+def test_gen_spelling_prices_like_legacy_name():
+    prob = Problem(8192, 4096, 16, "float32")
+    legacy = Plan(prob, "tall_a", bm=512, bk=512, bn=128,
+                  kernel=KernelSpec("kmajor"))
+    spelled = dataclasses.replace(
+        legacy, kernel=KernelSpec.make("gen", loop="kouter", acc="revisit"))
+    assert hbm_traffic_bytes(legacy) == hbm_traffic_bytes(spelled)
+    assert vmem_bytes_needed(legacy) == vmem_bytes_needed(spelled)
+    assert contraction_steps(legacy) == contraction_steps(spelled)
+    assert grid_rank(legacy) == grid_rank(spelled)
+    assert feasible(legacy) == feasible(spelled)
+
+
+def test_novel_points_enter_the_candidate_space():
+    cands = candidate_blocks(Problem(8192, 4096, 16, "float32"))
+    assert any(p.kernel.name == "gen" for p in cands)
+    # and every candidate decodes to a valid grammar point for its regime
+    for p in cands[:50]:
+        g = from_kernel_spec(p.kernel)
+        assert grammar.valid(g, p.orientation, p.prepack), p.kernel.key()
+
+
+# ---------------------------------------------------------------------------
+# pre-grammar cache back-compat (satellite: fixture registry)
+# ---------------------------------------------------------------------------
+
+
+def test_pre_grammar_caches_load_and_resolve(cache_env):
+    """Plan + measurement caches written BEFORE the grammar existed (legacy
+    KernelSpec names) must load, decode to their grammar points, resolve
+    their measurement records via unchanged tuning keys, and keep their
+    measured provenance over model-ranked challengers."""
+    shutil.copy(DATA / "pre_grammar_plans.json", cache_env / "plans.json")
+    shutil.copy(DATA / "pre_grammar_measurements.json",
+                cache_env / "measurements.json")
+    registry.clear_memory()
+
+    tall = Problem(8192, 4096, 16, "float32")
+    cached = registry.get(tall.key())
+    assert cached is not None and cached.chosen_by == "measured"
+    assert cached.kernel.key() == "kmajor"
+    assert cached.gen_spec() == GenSpec(loop="kouter", acc="revisit")
+    assert feasible(cached)
+    rec = registry.lookup_measurement(cached)
+    assert rec is not None and rec.seconds == pytest.approx(4.2e-5)
+
+    skinny = Problem(8, 2048, 1024, "float32")
+    sk = registry.get(skinny.key())
+    assert sk.kernel.key() == "ksplit[splits=2]"
+    assert sk.gen_spec() == GenSpec(ksplit=2, epi="postreduce")
+    assert registry.lookup_measurement(sk) is not None
+
+    # provenance guard: a model-ranked grammar candidate cannot displace
+    # the measured pre-grammar winner
+    challenger = predict(dataclasses.replace(
+        cached, kernel=KernelSpec.make("gen", bres="resident",
+                                       epi="split"),
+        chosen_by="model"), default_hw())
+    stood = registry.put(challenger, persist=False)
+    assert stood.kernel.key() == "kmajor" and stood.chosen_by == "measured"
+    # ... and the planner keeps serving it
+    assert make_plan(tall, persist=False).kernel.key() == "kmajor"
+
+
+# ---------------------------------------------------------------------------
+# tournament warm start: winner transfer from neighboring shapes
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_candidates_rebase_neighbor_winners(cache_env):
+    problem = Problem(4096, 1024, 16, "float32")
+    neighbor = Problem(2048, 1024, 16, "float32")
+    winner = Plan(neighbor, "tall_a", bm=512, bk=512, bn=128,
+                  kernel=KernelSpec("b_resident"), chosen_by="measured")
+    assert feasible(winner)
+    registry.put(winner, persist=False)
+
+    trans = _transfer_candidates(problem, default_hw())
+    assert len(trans) == 1
+    t = trans[0]
+    assert t.problem == problem                  # rebased onto this shape
+    assert t.kernel.key() == "b_resident"        # the transferred choice
+    assert t.chosen_by == "model"                # must re-earn "measured"
+    assert t.score > 0.0                         # re-predicted, not stale
+
+
+def test_transfer_candidates_skip_model_ranked_neighbors(cache_env):
+    problem = Problem(4096, 1024, 16, "float32")
+    neighbor = Problem(8192, 1024, 16, "float32")
+    registry.put(Plan(neighbor, "tall_a", bm=512, bk=512, bn=128,
+                      chosen_by="model"), persist=False)
+    assert _transfer_candidates(problem, default_hw()) == []
+
+
+def test_tournament_measures_transferred_winner_first(cache_env,
+                                                      monkeypatch):
+    from repro.core import evaluator
+    problem = Problem(4096, 1024, 16, "float32")
+    neighbor = Problem(2048, 1024, 16, "float32")
+    winner = Plan(neighbor, "tall_a", bm=512, bk=512, bn=128,
+                  kernel=KernelSpec("b_resident"), chosen_by="measured")
+    registry.put(winner, persist=False)
+
+    timed = []
+
+    def fake_measure(plan, impl=None, **kw):
+        timed.append(plan)
+        rec = registry.MeasureRecord(
+            plan=plan, seconds=1e-3 * len(timed), iters=kw.get("iters", 1),
+            dispersion=0.0)
+        registry.record_measurement(rec)
+        return rec
+
+    monkeypatch.setattr(evaluator, "measure_plan", fake_measure)
+    best = make_plan(problem, measure="wallclock", top_k=6, stable=2,
+                     persist=False)
+    assert timed[0].kernel.key() == "b_resident", \
+        "transferred neighbor winner must open the tournament"
+    assert timed[0].problem == problem
+    assert best.chosen_by == "measured"
+    assert best.kernel.key() == "b_resident"     # fake clock: first wins

@@ -122,6 +122,41 @@ def test_corrupt_cache_entry_recompiles(small, tmp_path):
     assert p2.source == "traced"          # fell back, no crash
 
 
+def test_grammar_version_bump_invalidates_disk_cache(small, tmp_path,
+                                                     monkeypatch):
+    """The kernel-synthesis grammar version is folded into the program
+    key (DESIGN.md §14): bumping it must turn every disk-cached
+    executable into a clean miss — recompile, no crash, no stale hit —
+    because a grammar change can alter what any tuned plan lowers to."""
+    from repro.kernels.variants import grammar
+
+    model, params, axes = small
+    store = ProgramStore(model, cache_dir=tmp_path)
+    p1 = store.program("decode", _decode_args(model, params),
+                       bucket=2, tokens=1)
+    assert p1.source == "traced"
+    logits1, _ = p1.fn(*_decode_args(model, params))
+    # same grammar: a fresh store hits the disk cache
+    p2 = ProgramStore(model, cache_dir=tmp_path).program(
+        "decode", _decode_args(model, params), bucket=2, tokens=1)
+    assert p2.source == "disk" and p2.key == p1.key
+
+    monkeypatch.setattr(grammar, "GRAMMAR_VERSION", "gen-test-bump")
+    store3 = ProgramStore(model, cache_dir=tmp_path)
+    p3 = store3.program("decode", _decode_args(model, params),
+                        bucket=2, tokens=1)
+    assert p3.key != p1.key               # structural key moved
+    assert p3.source == "traced"          # clean miss: recompiled
+    assert store3.stats()["from_disk"] == 0
+    logits3, _ = p3.fn(*_decode_args(model, params))
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits3))
+    # the old entry is untouched on disk; reverting the bump hits it again
+    monkeypatch.undo()
+    p4 = ProgramStore(model, cache_dir=tmp_path).program(
+        "decode", _decode_args(model, params), bucket=2, tokens=1)
+    assert p4.key == p1.key and p4.source == "disk"
+
+
 # ---------------------------------------------------------------------------
 # precompile -> engine: the compile-once acceptance contract
 # ---------------------------------------------------------------------------

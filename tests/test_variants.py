@@ -21,7 +21,8 @@ from repro.core.vmem_model import contraction_steps, feasible, predict
 from repro.kernels import ops, ref
 from repro.kernels import variants
 from repro.kernels.variants import (BASELINE, KernelSpec, parse_spec,
-                                    run_skinny_a, run_tall_a, specs_for,
+                                    run_skinny_a, run_tall_a,
+                                    sampled_specs_for, specs_for,
                                     variant_names, verify_variants)
 
 DATA = Path(__file__).parent / "data"
@@ -122,7 +123,8 @@ TALL_SHAPES = [(256, 512, 8), (300, 520, 17)]        # aligned + ragged
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("m,k,n", TALL_SHAPES)
-@pytest.mark.parametrize("spec", specs_for("tall_a"), ids=lambda s: s.key())
+@pytest.mark.parametrize("spec", sampled_specs_for("tall_a"),
+                         ids=lambda s: s.key())
 def test_tall_variant_parity_interpret(spec, m, k, n, dtype):
     a, b = _mk((m, k), dtype), _mk((k, n), dtype)
     want = ref.tsmm_ref(a, b)
@@ -143,7 +145,7 @@ SKINNY_SHAPES = [(4, 512, 256), (13, 640, 384)]      # aligned + ragged
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("m,k,n", SKINNY_SHAPES)
-@pytest.mark.parametrize("spec", specs_for("skinny_a", prepack=False),
+@pytest.mark.parametrize("spec", sampled_specs_for("skinny_a", prepack=False),
                          ids=lambda s: s.key())
 def test_skinny_variant_parity_interpret(spec, m, k, n, dtype):
     x, w = _mk((m, k), dtype), _mk((k, n), dtype)
