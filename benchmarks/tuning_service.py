@@ -1,0 +1,147 @@
+"""Fleet tuning service benchmark (DESIGN.md §15): BENCH_9.
+
+Measures the tuning service's throughput on a tiny TSMM shape grid —
+the rate at which registry misses become measured, committed winners —
+and the multiprocess scaling the queue's claim/lease protocol buys:
+the SAME job set is drained once by a single worker process and once
+by ``--workers`` processes, each phase against its own fresh fleet
+directory (separate measurement caches, so the second phase cannot
+replay the first phase's records for free).
+
+Rows (BENCH_*.json schema): per phase the mean wall-clock per resolved
+job (``us_per_call``) with misses-resolved-per-minute derived, plus the
+fleet speedup row.  Kernel timing is compute-bound, so the speedup
+ceiling is the host's core count — on a 1-core CI box the N-worker
+phase CANNOT beat 1 worker (it only proves the claim/lease protocol
+adds little overhead under contention); the row records the core count
+so the number reads correctly.  The gate is "every job resolved
+exactly once", not a speedup floor.
+
+    PYTHONPATH=src python -m benchmarks.tuning_service [--workers 3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks.common import ART, emit, write_bench_json
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# the shape grid: skinny-A decode shapes + tall-A prefill shapes across
+# a bucket ladder — all TSMM, heavy enough (k=4096) that per-job
+# build+measure time dominates queue overhead, so fleet scaling is
+# visible over the claim/lease protocol's cost
+GRID = [(2, 4096, 512), (4, 4096, 512), (8, 4096, 512),
+        (512, 4096, 64), (1024, 4096, 64), (2048, 4096, 64),
+        (1024, 4096, 128), (2048, 4096, 128), (4096, 4096, 128)]
+
+
+def _seed_fleet(root: Path, problems) -> int:
+    """Fresh fleet dir with one harvested job per problem; returns the
+    job count.  Runs in a subprocess so each phase's registry state is
+    fully isolated from ours and from the other phase's."""
+    code = f"""
+import json
+from repro.core import registry
+from repro.core.plan import Problem
+from repro.tuning.queue import JobQueue, harvest
+for m, k, n in {problems!r}:
+    registry.get(Problem(m, k, n, "float32").key())
+registry.flush_misses()
+q = JobQueue()
+harvest(q)
+print("JOBS=" + str(q.status()["total"]))
+"""
+    out = subprocess.run([sys.executable, "-c", code], env=_env(root),
+                         capture_output=True, text=True, check=True)
+    return int(out.stdout.strip().rsplit("JOBS=", 1)[1])
+
+
+def _env(root: Path) -> dict:
+    return dict(os.environ, PYTHONPATH=SRC,
+                REPRO_PLAN_CACHE=str(root / "plans.json"),
+                REPRO_MEASURE_CACHE=str(root / "meas.json"),
+                REPRO_MISS_LOG=str(root / "misses.json"),
+                REPRO_TUNE_QUEUE=str(root / "queue.json"))
+
+
+def _drain(root: Path, workers: int, iters: int) -> dict:
+    """Run the worker fleet to empty the queue; returns phase stats.
+
+    ``span`` is the first-claim -> last-complete window read off the
+    queue's own per-job audit trail — the fleet is a long-lived service,
+    so per-process startup (the jax import each forked worker pays)
+    amortizes to zero and is excluded from the throughput number;
+    ``wall`` (startup included) is reported alongside for honesty."""
+    cmd = [sys.executable, "-m", "repro.launch.tune_service", "work",
+           "--workers", str(workers), "--iters", str(iters),
+           "--warmup", "0", "--top-k", "2", "--stable", "1",
+           "--build-k", "2"]
+    t0 = time.perf_counter()
+    res = subprocess.run(cmd, env=_env(root), capture_output=True,
+                         text=True)
+    wall = time.perf_counter() - t0
+    raw = json.loads((root / "queue.json").read_text())["jobs"]
+    if res.returncode != 0 or any(j["state"] != "done"
+                                  for j in raw.values()):
+        states = {k: j["state"] for k, j in raw.items()}
+        raise RuntimeError(f"fleet drain failed (rc={res.returncode}, "
+                           f"states={states}):\n{res.stdout}\n{res.stderr}")
+    times = [t for j in raw.values() for ev, _, t in j["history"]
+             if ev in ("claim", "done")]
+    return {"wall": wall, "span": max(times) - min(times),
+            "done": len(raw)}
+
+
+def run(workers: int = 3, iters: int = 2) -> list:
+    report = []
+    phases = {}
+    for label, n in (("1_worker", 1), (f"{workers}_worker", workers)):
+        root = Path(tempfile.mkdtemp(prefix=f"bench9_{label}_"))
+        jobs = _seed_fleet(root, GRID)
+        phases[label] = {**_drain(root, n, iters), "jobs": jobs}
+
+    rows = []
+    for label, ph in phases.items():
+        per_job_s = ph["span"] / max(ph["done"], 1)
+        rows.append((label, per_job_s * 1e6,
+                     f"{ph['done'] * 60.0 / max(ph['span'], 1e-9):.1f} "
+                     f"jobs/min ({ph['done']} jobs, span "
+                     f"{ph['span']:.2f}s, wall {ph['wall']:.1f}s)"))
+    report.append(("fleet_throughput", rows))
+
+    one, fleet = phases["1_worker"], phases[f"{workers}_worker"]
+    report.append(("scaling", [
+        (f"speedup_{workers}x",
+         fleet["span"] * 1e6 / max(fleet["done"], 1),
+         f"{one['span'] / max(fleet['span'], 1e-9):.2f}x measured-span "
+         f"speedup vs 1 worker ({one['wall'] / fleet['wall']:.2f}x wall "
+         f"incl. startup; ceiling = {os.cpu_count()} cores)"),
+    ]))
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--iters", type=int, default=2,
+                    help="timed iterations per measured candidate")
+    args = ap.parse_args()
+    report = run(workers=args.workers, iters=args.iters)
+    for section, rows in report:
+        print(f"-- {section} --")
+        emit(rows)
+    out = write_bench_json(ART / "BENCH_9.json", "tuning_service", report)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -162,8 +162,8 @@ def _transfer_candidates(problem: Problem, hw: HwSpec,
     return out
 
 
-def _measure_short_list(cands: list, *, top_k: int, stable: int,
-                        iters: int, warmup: int) -> Plan:
+def measure_short_list(cands: list, *, top_k: int, stable: int,
+                       iters: int, warmup: int) -> Plan:
     """Tournament evaluator stage (DESIGN.md §9, §14): the model-ranked
     short-list is measured in order — cached records replay for free —
     with the wall-clock leader defending against each challenger; the
@@ -189,6 +189,10 @@ def _measure_short_list(cands: list, *, top_k: int, stable: int,
              tried, len(cands), streak)
     return dataclasses.replace(best, score=best_rec.seconds,
                                chosen_by="measured")
+
+
+# original private name (pre-fleet-service callers)
+_measure_short_list = measure_short_list
 
 
 def make_plan(

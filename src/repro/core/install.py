@@ -262,7 +262,15 @@ def main(argv=None):
                          "Engine(max_len=...) for the cache to hit")
     ap.add_argument("--program-cache", default="",
                     help="program-cache directory override for --precompile")
+    ap.add_argument("--find-db", default="",
+                    help="attach a fleet find-db artifact (DESIGN.md §15) "
+                         "before the sweep: sets REPRO_FIND_DB so "
+                         "--check validates serving coverage against the "
+                         "exported artifact, not just the local cache")
     args = ap.parse_args(argv)
+    if args.find_db:
+        from repro.tuning.find_db import attach
+        attach(args.find_db)
     archs = ([a.strip() for a in args.archs.split(",") if a.strip()]
              or ARCH_IDS)
     buckets = buckets_for(args.max_batch)

@@ -96,6 +96,16 @@ def miss_log_max() -> int:
     return int(raw) if raw else MISS_LOG_MAX_DEFAULT
 
 
+def miss_log_path() -> Path:
+    """Persisted miss log — the fleet tuning service's input
+    (``REPRO_MISS_LOG`` or a sibling of the plan cache).  Written by
+    ``flush_misses``, consumed by ``repro.tuning.queue.harvest``."""
+    p = os.environ.get("REPRO_MISS_LOG")
+    if p:
+        return Path(p)
+    return cache_path().with_name("misses.json")
+
+
 def _key(problem_key: str) -> str:
     return f"{_platform()}/{problem_key}"
 
@@ -198,10 +208,13 @@ class Registry:
         # After the install stage has swept the serving buckets, an Engine
         # start must be all hits (asserted in tests/test_bucketed_serving.py).
         self._stats = {"hits": 0, "misses": 0}
-        # ordered de-duplicated problem keys that missed — drained by the
-        # serving engine's background tuner (DESIGN.md §9)
-        self._missed: list[str] = []
-        self._missed_set: set = set()
+        # ordered de-duplicated miss records, keyed by problem key with
+        # (count, last_seen) per key — drained by the serving engine's
+        # background tuner (DESIGN.md §9) or flushed to the persisted
+        # miss log for the fleet tuning service (DESIGN.md §15).  Dict
+        # insertion order IS the miss order, so cap eviction stays
+        # oldest-first exactly as the old list was.
+        self._missed: dict = {}
         # problem key -> frozenset of candidate tuning keys (or None on
         # enumeration failure), memoized across prune passes: candidate
         # enumeration is pure in the problem, so one walk per problem per
@@ -220,9 +233,21 @@ class Registry:
     # -- plans ----------------------------------------------------------
 
     def _load_file(self) -> None:
-        """(lock held) fold the on-disk plan map into memory."""
+        """(lock held) fold the on-disk plan map into memory, then
+        overlay the attached find-db artifact (``REPRO_FIND_DB``) for
+        keys still missing — local plans always win over the artifact,
+        so a host that has tuned past its find-db keeps its newer
+        winners while everything else resolves fleet-wide."""
         _fold_missing(self.plan_path(), self._mem, Plan.from_json)
         self._loaded_from = self.plan_path()
+        if os.environ.get("REPRO_FIND_DB", ""):
+            from repro.tuning.find_db import read_find_db  # lazy: no cycle
+            folded = 0
+            for problem_key, plan in read_find_db().items():
+                if self._mem.setdefault(_key(problem_key), plan) is plan:
+                    folded += 1
+            if folded:
+                log.info("registry: %d plans folded from find-db", folded)
 
     def _merge_disk(self, protect: frozenset = frozenset()) -> None:
         """Fold plans persisted by OTHER processes into memory (lock held).
@@ -263,11 +288,17 @@ class Registry:
                 self._stats["hits"] += 1
             else:
                 self._stats["misses"] += 1
-                if problem_key not in self._missed_set:
+                rec = self._missed.get(problem_key)
+                if rec is not None:
+                    # repeated miss: count it (hot misses rank first at
+                    # harvest) without re-ordering the log
+                    rec["count"] += 1
+                    rec["last_seen"] = time.time()
+                else:
                     while len(self._missed) >= miss_log_max():
-                        self._missed_set.discard(self._missed.pop(0))
-                    self._missed_set.add(problem_key)
-                    self._missed.append(problem_key)
+                        self._missed.pop(next(iter(self._missed)))
+                    self._missed[problem_key] = {"count": 1,
+                                                 "last_seen": time.time()}
             return plan
 
     def peek(self, problem_key: str) -> Optional[Plan]:
@@ -421,11 +452,74 @@ class Registry:
     def drain_misses(self) -> list:
         """Return-and-clear the ordered list of problem keys that missed
         since the last drain — the background tuner's work queue."""
+        return [r["key"] for r in self.drain_miss_records()]
+
+    def miss_records(self) -> list:
+        """Snapshot of the pending miss log (no drain): ordered
+        ``{"key", "count", "last_seen"}`` dicts, one per distinct
+        problem key, counts accumulated across repeated misses."""
         with self._lock:
-            out = self._missed
-            self._missed = []
-            self._missed_set = set()
+            return [{"key": k, **r} for k, r in self._missed.items()]
+
+    def drain_miss_records(self) -> list:
+        """Return-and-clear the deduped miss records (miss order kept)."""
+        with self._lock:
+            out = [{"key": k, **r} for k, r in self._missed.items()]
+            self._missed = {}
             return out
+
+    def flush_misses(self, path: Optional[Path] = None) -> int:
+        """Drain the in-memory miss log into the persisted miss file —
+        the fleet handoff (DESIGN.md §15): an engine in fleet mode calls
+        this instead of tuning its own misses, and ``harvest`` turns the
+        file into queue jobs.  Records merge per ``platform/problem``
+        key (counts sum, last_seen maxes) under the same atomic
+        read-merge-replace discipline as the plan map, so concurrent
+        engines never lose each other's misses.  Returns the number of
+        records drained (0 = no write at all)."""
+        drained = self.drain_miss_records()
+        if not drained:
+            return 0
+        path = Path(path) if path is not None else miss_log_path()
+        raw = _read_json(path) or {}
+        for r in drained:
+            k = _key(r["key"])
+            cur = raw.get(k)
+            if isinstance(cur, dict):
+                raw[k] = {"count": int(cur.get("count", 0)) + r["count"],
+                          "last_seen": max(float(cur.get("last_seen", 0.0)),
+                                           r["last_seen"])}
+            else:
+                raw[k] = {"count": r["count"], "last_seen": r["last_seen"]}
+        _atomic_write_json(path, raw)
+        log.info("registry: flushed %d miss records -> %s", len(drained),
+                 path)
+        return len(drained)
+
+    # -- fleet snapshot/preload (tuning service seam) -------------------
+
+    def snapshot_plans(self) -> dict:
+        """Full merged plan map (memory + disk, per-key provenance rules)
+        as a copy — the find-db export's read path."""
+        with self._lock:
+            if self._loaded_from is None:
+                self._load_file()
+            self._merge_disk()
+            return dict(self._mem)
+
+    def preload_plans(self, plans: dict) -> int:
+        """Seed memory with ``{full_key: Plan}`` for keys not already
+        held (testing/bootstrap hook; the find-db overlay in
+        ``_load_file`` is the production path)."""
+        with self._lock:
+            if self._loaded_from is None:
+                self._load_file()
+            n = 0
+            for k, p in plans.items():
+                if k not in self._mem:
+                    self._mem[k] = p
+                    n += 1
+            return n
 
     def clear_memory(self) -> None:
         """Testing hook: drop the in-memory caches (files untouched)."""
@@ -435,8 +529,7 @@ class Registry:
             self._loaded_from = None
             self._meas_loaded_from = None
             self._stats["hits"] = self._stats["misses"] = 0
-            self._missed = []
-            self._missed_set = set()
+            self._missed = {}
             self._valid_tuning_keys = {}
 
 
@@ -490,6 +583,26 @@ def reset_stats() -> None:
 
 def drain_misses() -> list:
     return _DEFAULT.drain_misses()
+
+
+def miss_records() -> list:
+    return _DEFAULT.miss_records()
+
+
+def drain_miss_records() -> list:
+    return _DEFAULT.drain_miss_records()
+
+
+def flush_misses(path: Optional[Path] = None) -> int:
+    return _DEFAULT.flush_misses(path)
+
+
+def snapshot_plans() -> dict:
+    return _DEFAULT.snapshot_plans()
+
+
+def preload_plans(plans: dict) -> int:
+    return _DEFAULT.preload_plans(plans)
 
 
 def clear_memory() -> None:

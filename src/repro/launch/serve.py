@@ -78,6 +78,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--override", default="",
+                    help="comma-separated config overrides (k=v ints, e.g. "
+                         "d_model=512,num_layers=1) applied on top of the "
+                         "selected config — the fleet-tuning CI uses this "
+                         "to shape a reduced config into TSMM territory")
+    ap.add_argument("--find-db", default="",
+                    help="attach a fleet find-db artifact (DESIGN.md §15): "
+                         "sets REPRO_FIND_DB so the registry overlays the "
+                         "exported plans at load")
+    ap.add_argument("--require-warm", action="store_true",
+                    help="exit 1 if serving logged ANY registry miss or "
+                         "traced ANY program — the fleet 'restart is "
+                         "lookup-only' CI gate")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--trace", default="",
                     help="comma-separated request groups: sizes (3,17,64) "
@@ -117,8 +130,18 @@ def main():
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
+    if args.find_db:
+        from repro.tuning.find_db import attach
+        attach(args.find_db)
     cfg = (get_reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
+    if args.override:
+        overrides = {}
+        for part in args.override.split(","):
+            k, _, v = part.strip().partition("=")
+            if k:
+                overrides[k] = int(v)
+        cfg = cfg.reduced(**overrides)
     model = build_model(cfg)
     params, axes = model.init(jax.random.PRNGKey(0))
 
@@ -182,6 +205,11 @@ def main():
             print(f"background tuner committed {len(eng.tuner.committed)} "
                   f"measured plans "
                   f"({len(registry.measurements())} cached measurements)")
+        if args.require_warm and (s["misses"] or ps["traced"]):
+            raise SystemExit(
+                f"--require-warm: serving was NOT lookup-only "
+                f"({s['misses']} registry misses, {ps['traced']} traced "
+                f"programs) — stale find-db or program cache?")
 
     if args.async_mode:
         from repro.serve.clock import VirtualClock

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import os
 import threading
 from typing import Optional
 
@@ -139,11 +140,18 @@ class _BackgroundTuner:
     thread with the adaptive short-list search, and the measured winner
     is committed back to the registry — admission never blocks on a
     stopwatch.  The registry's provenance guard makes the commit safe
-    against concurrent model-ranked puts from the serving thread."""
+    against concurrent model-ranked puts from the serving thread.
+
+    With a fleet tuning ``queue`` attached (DESIGN.md §15) the tuner
+    defers to the fleet: any missed key the queue already owns —
+    pending, leased by a worker, or measured (done) — is skipped here,
+    so a miss is measured exactly once fleet-wide even when a host runs
+    its own background tuner alongside the worker fleet."""
 
     def __init__(self, hw=None, *, top_k: int = 4, stable: int = 2,
-                 iters: int = 3, warmup: int = 1):
+                 iters: int = 3, warmup: int = 1, queue=None):
         self.hw = hw
+        self.queue = queue
         self.top_k, self.stable = top_k, stable
         self.iters, self.warmup = iters, warmup
         self.committed: list = []
@@ -176,6 +184,17 @@ class _BackgroundTuner:
     def _work(self, keys: list) -> None:
         from repro.core import registry
         from repro.core.autotuner import make_plan
+        if self.queue is not None:
+            try:
+                fleet_owned = self.queue.active_keys()
+            except Exception:
+                log.exception("fleet queue unreadable; tuning locally")
+                fleet_owned = set()
+            deferred = [k for k in keys if k in fleet_owned]
+            keys = [k for k in keys if k not in fleet_owned]
+            if deferred:
+                log.info("background tuner: %d misses deferred to the "
+                         "fleet queue", len(deferred))
         for key in keys:
             try:
                 cur = registry.peek(key)
@@ -228,7 +247,7 @@ class Engine:
                  max_prompt: Optional[int] = None, min_prompt: int = 8,
                  mesh=None, opts: Optional[ShardingOptions] = None,
                  prepack: bool = True, background_tune: bool = False,
-                 tuner_opts: Optional[dict] = None,
+                 tuner_opts: Optional[dict] = None, tune_queue=None,
                  program_cache=None,
                  clock=None, step_cost: Optional[StepCost] = None):
         if max_batch is None:
@@ -247,6 +266,15 @@ class Engine:
         self.clock = ensure_clock(clock)
         self.step_cost = step_cost or StepCost()
         self.tuner: Optional[_BackgroundTuner] = None
+        # fleet mode (DESIGN.md §15): with a tune_queue attached (or
+        # REPRO_TUNE_QUEUE set) the fleet's workers own measurement.
+        # background_tune=False is the documented fleet default — misses
+        # then flush to the persisted miss log for harvest instead of
+        # being tuned in-process (see _drain_misses).
+        if tune_queue is None and os.environ.get("REPRO_TUNE_QUEUE", ""):
+            from repro.tuning.queue import JobQueue
+            tune_queue = JobQueue()
+        self.tune_queue = tune_queue
         if background_tune:
             # close the measure -> model -> plan loop: trace-time misses
             # rank against the measurement-calibrated model, and missed
@@ -254,7 +282,8 @@ class Engine:
             from repro.core import autotuner, evaluator
             hw = evaluator.calibrated_hw()
             autotuner.set_default_hw(hw)
-            self.tuner = _BackgroundTuner(hw, **(tuner_opts or {}))
+            self.tuner = _BackgroundTuner(hw, queue=tune_queue,
+                                          **(tuner_opts or {}))
         if buckets:
             self.buckets = tuple(sorted(buckets))
             # the largest admissible chunk is the largest bucket: bigger
@@ -371,10 +400,17 @@ class Engine:
     def _drain_misses(self) -> None:
         """Hand any registry misses since the last drain to the
         background tuner — serving already ran off the model-ranked
-        plans; measurement must never block the serving thread."""
-        if self.tuner is None:
-            return
+        plans; measurement must never block the serving thread.
+
+        Without a tuner (``background_tune=False``, the documented fleet
+        mode, DESIGN.md §15) the misses flush to the persisted miss log
+        instead: the fleet's ``harvest`` step turns them into queue jobs
+        and the workers do the measuring.  A no-op when nothing missed,
+        so warm lookup-only serving never touches the file."""
         from repro.core import registry
+        if self.tuner is None:
+            registry.flush_misses()
+            return
         keys = registry.drain_misses()
         if keys:
             log.info("background-tuning %d registry misses", len(keys))

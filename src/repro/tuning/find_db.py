@@ -1,0 +1,246 @@
+"""Find-db: the read-only tuned-plan artifact (DESIGN.md §15).
+
+MITuna's ``find_db`` idea applied to this registry: once the fleet's
+workers have measured a wave of jobs, ``export`` compiles the merged
+plan registry into a single versioned artifact that serving hosts load
+at start.  The registry stays the fleet's mutable working state; the
+find-db is its immutable, distributable snapshot — engines opening it
+never write to it (the file is chmod'd read-only as a belt-and-braces
+reminder), so engine start stays lookup-only fleet-wide and a bad tuning
+run can be rolled back by pointing ``REPRO_FIND_DB`` at the previous
+artifact.
+
+The header carries everything needed to refuse a stale artifact:
+
+* ``grammar_version`` — a plan's tuning key names grammar points; after
+  a grammar bump those points may not exist, so a strict load rejects a
+  mismatched artifact (non-strict drops to a warning: the registry's
+  own candidate-validity pruning handles dead keys gracefully).
+* ``platforms`` — fingerprints of every platform sectioned in the file;
+  a host loads only its own platform's section, so one artifact serves
+  a heterogeneous fleet.
+
+Alongside the find-db, ``export --programs`` bundles the install-time
+AOT program cache (``REPRO_PROGRAM_CACHE``) with a sha256 manifest —
+the PR 7 "cross-host program-cache distribution" follow-up: a new host
+verifies the manifest, drops the bundle into its own cache dir and
+starts with zero traces.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import logging
+import os
+import shutil
+import stat
+import time
+from pathlib import Path
+from typing import Optional
+
+log = logging.getLogger(__name__)
+
+FIND_DB_SCHEMA = 1
+
+
+def find_db_path() -> Optional[Path]:
+    """``REPRO_FIND_DB`` (empty/unset -> no artifact attached)."""
+    raw = os.environ.get("REPRO_FIND_DB", "")
+    return Path(raw) if raw else None
+
+
+def attach(path) -> None:
+    """Point this process (and its children) at a find-db artifact —
+    the programmatic spelling of ``REPRO_FIND_DB=...``."""
+    os.environ["REPRO_FIND_DB"] = str(path)
+
+
+def platform_fingerprint(platform: Optional[str] = None) -> str:
+    """What 'same platform' means for plan reuse: backend name + device
+    kind + jax version.  Coarser than a full CPU model string on purpose
+    — the registry already keys plans per backend, and the fingerprint
+    exists to catch artifact/host mismatches a human should see, not to
+    partition the fleet further than the registry does."""
+    import jax
+    platform = platform or jax.default_backend()
+    kinds = sorted({d.device_kind for d in jax.devices()
+                    if d.platform == platform}) or ["unknown"]
+    return f"{platform}|{'+'.join(kinds)}|jax={jax.__version__}"
+
+
+# ---------------------------------------------------------------------------
+# export
+# ---------------------------------------------------------------------------
+
+
+def export_find_db(out_path, *, registry=None, platform: Optional[str] = None,
+                   measured_only: bool = False) -> dict:
+    """Compile the merged plan registry into a find-db artifact.
+
+    Reads through the registry's own snapshot path (load + disk-merge
+    under its lock), so concurrent worker flushes are folded in rather
+    than clobbered.  ``measured_only`` drops model-ranked plans — a
+    conservative artifact containing nothing but wall-clocked winners.
+    Returns the header that was written."""
+    from repro.core import registry as reg_mod
+    from repro.kernels.variants.grammar import GRAMMAR_VERSION
+
+    reg = registry if registry is not None else reg_mod.default()
+    plans = reg.snapshot_plans()
+    sections: dict = {}
+    for full_key, plan in plans.items():
+        plat, _, problem_key = full_key.partition("/")
+        if not problem_key:
+            continue
+        if platform is not None and plat != platform:
+            continue
+        if measured_only and plan.chosen_by != "measured":
+            continue
+        sections.setdefault(plat, {})[problem_key] = plan.to_json()
+
+    platforms = {p: platform_fingerprint(p) for p in sorted(sections)}
+    header = {"schema": FIND_DB_SCHEMA,
+              "grammar_version": GRAMMAR_VERSION,
+              "platforms": platforms,
+              "created": time.time(),
+              "plan_count": sum(len(s) for s in sections.values()),
+              "measured_only": measured_only}
+    out_path = Path(out_path)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    blob = {"header": header, "plans": sections}
+    tmp = out_path.with_name(out_path.name + f".tmp.{os.getpid()}")
+    tmp.write_text(json.dumps(blob, indent=1))
+    os.replace(tmp, out_path)
+    # read-only: the artifact is a snapshot, never a working file.  A
+    # re-export to the same path still works (os.replace swaps the inode).
+    try:
+        out_path.chmod(stat.S_IRUSR | stat.S_IRGRP | stat.S_IROTH)
+    except OSError:
+        pass
+    log.info("find-db: exported %d plans (%d platforms) -> %s",
+             header["plan_count"], len(platforms), out_path)
+    return header
+
+
+# ---------------------------------------------------------------------------
+# load
+# ---------------------------------------------------------------------------
+
+
+def read_find_db(path=None, *, platform: Optional[str] = None,
+                 strict: bool = False) -> dict:
+    """Decode one platform's plan section: ``{problem_key: Plan}``.
+
+    Non-strict (the registry overlay's mode): any problem — missing or
+    unreadable file, schema or grammar mismatch, absent platform section
+    — degrades to an empty dict with a warning, because an engine must
+    start even with a stale artifact.  ``strict=True`` (the CLI's
+    ``status``/install ``--check`` mode) raises instead, so automation
+    can gate on artifact validity."""
+    from repro.core.plan import Plan
+    from repro.kernels.variants.grammar import GRAMMAR_VERSION
+
+    path = Path(path) if path is not None else find_db_path()
+    if path is None:
+        return {}
+
+    def problem(msg: str) -> dict:
+        if strict:
+            raise ValueError(f"find-db {path}: {msg}")
+        log.warning("find-db %s ignored: %s", path, msg)
+        return {}
+
+    try:
+        blob = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return problem(f"unreadable ({e})")
+    header = blob.get("header", {})
+    if header.get("schema") != FIND_DB_SCHEMA:
+        return problem(f"schema {header.get('schema')!r} != {FIND_DB_SCHEMA}")
+    if header.get("grammar_version") != GRAMMAR_VERSION:
+        return problem(f"grammar {header.get('grammar_version')!r} != "
+                       f"{GRAMMAR_VERSION} (re-export after a grammar bump)")
+    if platform is None:
+        import jax
+        platform = jax.default_backend()
+    section = blob.get("plans", {}).get(platform)
+    if section is None:
+        return problem(f"no section for platform {platform!r} "
+                       f"(has {sorted(blob.get('plans', {}))})")
+    out = {}
+    for problem_key, pj in section.items():
+        try:
+            out[problem_key] = Plan.from_json(pj)
+        except (TypeError, KeyError):
+            log.warning("find-db %s: undecodable plan for %s skipped",
+                        path, problem_key)
+    return out
+
+
+def read_header(path) -> dict:
+    """The artifact header alone (for ``status`` and manifest checks)."""
+    blob = json.loads(Path(path).read_text())
+    return blob.get("header", {})
+
+
+# ---------------------------------------------------------------------------
+# program bundle (the PR 7 cross-host distribution follow-up)
+# ---------------------------------------------------------------------------
+
+MANIFEST_NAME = "MANIFEST.json"
+
+
+def export_program_bundle(out_dir, *, src_dir=None) -> dict:
+    """Copy the AOT program cache into ``out_dir`` with a fingerprint
+    manifest (per-file sha256 + the code/grammar fingerprints the
+    programs were compiled under).  Returns the manifest."""
+    from repro.kernels.variants.grammar import GRAMMAR_VERSION
+    from repro.serve.programs import (PROGRAM_SCHEMA, code_fingerprint,
+                                      program_cache_dir)
+
+    src = Path(src_dir) if src_dir else program_cache_dir()
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    files = {}
+    if src is not None and src.is_dir():
+        for f in sorted(src.glob("*.prog")):
+            data = f.read_bytes()
+            shutil.copy2(f, out_dir / f.name)
+            files[f.name] = {"sha256": hashlib.sha256(data).hexdigest(),
+                             "bytes": len(data)}
+    manifest = {"schema": PROGRAM_SCHEMA,
+                "code_fingerprint": code_fingerprint(),
+                "grammar_version": GRAMMAR_VERSION,
+                "created": time.time(),
+                "files": files}
+    (out_dir / MANIFEST_NAME).write_text(json.dumps(manifest, indent=1))
+    log.info("program bundle: %d programs -> %s", len(files), out_dir)
+    return manifest
+
+
+def verify_program_bundle(bundle_dir) -> dict:
+    """Check a bundle against its manifest.  Returns
+    ``{"ok": bool, "checked": n, "problems": [...]}`` — a receiving host
+    runs this before pointing ``REPRO_PROGRAM_CACHE`` at the bundle."""
+    bundle_dir = Path(bundle_dir)
+    problems = []
+    try:
+        manifest = json.loads((bundle_dir / MANIFEST_NAME).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return {"ok": False, "checked": 0,
+                "problems": [f"manifest unreadable: {e}"]}
+    files = manifest.get("files", {})
+    for name, meta in files.items():
+        f = bundle_dir / name
+        if not f.exists():
+            problems.append(f"missing {name}")
+            continue
+        digest = hashlib.sha256(f.read_bytes()).hexdigest()
+        if digest != meta.get("sha256"):
+            problems.append(f"digest mismatch {name}")
+    from repro.serve.programs import code_fingerprint
+    if manifest.get("code_fingerprint") != code_fingerprint():
+        problems.append("code fingerprint differs from this checkout "
+                        "(programs will miss cleanly and recompile)")
+    return {"ok": not problems, "checked": len(files), "problems": problems}

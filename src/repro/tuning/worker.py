@@ -1,0 +1,272 @@
+"""Fleet tuning workers — MITuna's ``builder.py`` / ``evaluator.py``
+split over this repo's tuning stack (DESIGN.md §15).
+
+One worker process drains the job queue for its own platform:
+
+* :class:`Builder` turns a claimed job into a build-validated short
+  list.  It re-enumerates the grammar candidate space under the
+  CALIBRATED model (``evaluator.calibrated_hw`` — the fleet's pooled
+  measurement cache makes the prune sharper than any single host's),
+  seeds with the winner-transfer warm start, restricts to the job's
+  harvested payload when the grammar version still matches, and
+  AOT-lowers each survivor through ``serve/programs.py::aot_lower`` —
+  a candidate that fails to lower is pruned HERE, so the evaluator
+  never wastes stopwatch time on an uncompilable point (MITuna's
+  builder exists for exactly this reason).
+* :class:`Evaluator` runs the adaptive tournament
+  (``autotuner.measure_short_list`` — cached-measurement reuse,
+  early-stop once the leader is stable) with ``core/evaluator.py``
+  fidelity timing and parity checks, and commits the measured winner
+  through the registry's two-writer-safe flush-merge: concurrent
+  workers flushing different problems never lose each other's wins,
+  and the provenance guard keeps any existing measured winner over a
+  model-ranked challenger.
+
+:func:`run_worker` is the process body the ``tune_service work`` CLI
+forks N of.  ``REPRO_TUNE_CRASH=after-claim`` hard-kills the process
+right after its first claim — the fault-injection hook the lease
+requeue test uses to simulate a worker dying mid-job.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import time
+from typing import Optional
+
+log = logging.getLogger(__name__)
+
+# builder short-list depth: how many model-ranked candidates get an AOT
+# build; the evaluator's tournament then early-stops within these
+DEFAULT_BUILD_K = 8
+
+
+def _crash_point(point: str) -> None:
+    """Fault injection for the fleet tests: die the hard way (no atexit,
+    no finally) — exactly what a SIGKILLed or OOMed worker looks like."""
+    if os.environ.get("REPRO_TUNE_CRASH", "") == point:
+        log.warning("REPRO_TUNE_CRASH=%s: simulating worker crash", point)
+        os._exit(17)
+
+
+@dataclasses.dataclass
+class BuiltCandidate:
+    """One builder output: a plan that lowered cleanly (or the reason it
+    did not)."""
+    plan: object
+    ok: bool
+    build_s: float = 0.0
+    error: str = ""
+
+
+def _dispatch_args(plan):
+    """(fn, abstract args) for the plan's kernel dispatch — the exact
+    ``variants.run_*`` entry point serving replays, as shape structs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.evaluator import resolve_impl
+    from repro.kernels import variants
+
+    p = plan.problem
+    dt = jnp.bfloat16 if p.dtype == "bfloat16" else jnp.dtype(p.dtype)
+    impl = resolve_impl(plan.impl)
+    spec, sched = plan.kernel, plan.schedule
+    S = jax.ShapeDtypeStruct
+
+    def blocks(rows, cols, br, bc):
+        return (-(-rows // br), -(-cols // bc), br, bc)
+
+    if plan.orientation == "tall_a":
+        b = S((p.k, p.n), dt)
+        if plan.prepack:
+            ap = S(blocks(max(p.m, plan.bm), p.k, plan.bm, plan.bk), dt)
+            return (lambda a_, b_: variants.run_tall_a(
+                spec, a_, b_, bm=plan.bm, bk=plan.bk, packed=True,
+                impl=impl, schedule=sched), (ap, b))
+        return (lambda a_, b_: variants.run_tall_a(
+            spec, a_, b_, bm=plan.bm, bk=plan.bk, packed=False,
+            impl=impl, schedule=sched), (S((p.m, p.k), dt), b))
+    a = S((p.m, p.k), dt)
+    if plan.prepack:
+        wp = S(blocks(p.k, max(p.n, plan.bn), plan.bk, plan.bn), dt)
+        return (lambda a_, w_: variants.run_skinny_a(
+            spec, a_, w_, bk=plan.bk, bn=plan.bn, packed=True,
+            impl=impl, schedule=sched), (a, wp))
+    return (lambda a_, w_: variants.run_skinny_a(
+        spec, a_, w_, bk=plan.bk, bn=plan.bn, packed=False,
+        impl=impl, schedule=sched), (a, S((p.k, p.n), dt)))
+
+
+class Builder:
+    """Candidate enumeration + calibrated prune + AOT build validation."""
+
+    def __init__(self, *, build_k: int = DEFAULT_BUILD_K, reg=None):
+        self.build_k = build_k
+        from repro.core import registry
+        self.reg = reg if reg is not None else registry.default()
+        self._hw = None
+
+    def hw(self):
+        """Calibrated model, fitted once per worker from the pooled
+        measurement cache (fresh workers on an unmeasured fleet fall
+        back to the nominal spec)."""
+        if self._hw is None:
+            from repro.core.autotuner import default_hw
+            from repro.core.evaluator import calibrated_hw
+            self._hw = calibrated_hw(default_hw(), reg=self.reg)
+        return self._hw
+
+    def shortlist(self, job) -> list:
+        """Model-ranked candidate plans for one job, warm-started and
+        (when the payload's grammar version is current) restricted to
+        the harvested candidate set."""
+        from repro.core.autotuner import (_transfer_candidates,
+                                          candidate_blocks)
+        from repro.core.plan import Problem
+        from repro.kernels.variants.grammar import GRAMMAR_VERSION
+
+        problem = Problem.from_key(job.problem_key)
+        hw = self.hw()
+        warm = _transfer_candidates(problem, hw, reg=self.reg)
+        cands = candidate_blocks(problem, hw)
+        if job.candidates and job.grammar_version == GRAMMAR_VERSION:
+            payload = set(job.candidates)
+            narrowed = [c for c in cands if c.tuning_key() in payload]
+            # a stale payload (grammar point renamed, ladder moved) must
+            # not empty the search — fall back to the full enumeration
+            if narrowed:
+                cands = narrowed
+        seen, out = set(), []
+        for c in warm + cands:
+            tk = c.tuning_key()
+            if tk not in seen:
+                seen.add(tk)
+                out.append(c)
+        return out[:max(self.build_k, 1)]
+
+    def build(self, job) -> list:
+        """AOT-lower every short-listed plan; return the survivors (plus
+        failures, flagged, for the report).  Lowering compiles nothing a
+        serving host won't: the same ``aot_lower`` seam the ProgramStore
+        uses, on the same dispatch entry point the evaluator times."""
+        from repro.serve.programs import aot_lower
+
+        out = []
+        for plan in self.shortlist(job):
+            t0 = time.perf_counter()
+            try:
+                fn, args = _dispatch_args(plan)
+                aot_lower(fn, args)
+                out.append(BuiltCandidate(plan, True,
+                                          time.perf_counter() - t0))
+            except Exception as e:  # noqa: BLE001 — any failure = prune
+                out.append(BuiltCandidate(plan, False,
+                                          time.perf_counter() - t0,
+                                          f"{type(e).__name__}: {e}"))
+                log.info("builder: pruned %s (%s)", plan.tuning_key(), e)
+        return out
+
+
+class Evaluator:
+    """Tournament measurement + registry commit."""
+
+    def __init__(self, *, top_k: int = 4, stable: int = 2, iters: int = 3,
+                 warmup: int = 1, reg=None):
+        self.top_k = top_k
+        self.stable = stable
+        self.iters = iters
+        self.warmup = warmup
+        from repro.core import registry
+        self.reg = reg if reg is not None else registry.default()
+
+    def evaluate(self, built: list):
+        """Measure the build survivors, commit the winner (flush-merge +
+        provenance guard) and return the plan that actually stands in
+        the registry."""
+        from repro.core.autotuner import measure_short_list
+
+        cands = [b.plan for b in built if b.ok]
+        if not cands:
+            raise RuntimeError(
+                "no candidate survived the build stage: "
+                + "; ".join(b.error for b in built if not b.ok))
+        winner = measure_short_list(cands, top_k=self.top_k,
+                                    stable=self.stable, iters=self.iters,
+                                    warmup=self.warmup)
+        return self.reg.put(winner, persist=True)
+
+
+@dataclasses.dataclass
+class WorkReport:
+    """One worker run's ledger (the CLI prints it; tests assert on it)."""
+    worker: str
+    done: int = 0
+    failed: int = 0
+    seconds: float = 0.0
+    results: tuple = ()          # (job_id, winning tuning_key) pairs
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["results"] = [list(r) for r in self.results]
+        return d
+
+
+def run_worker(queue=None, *, worker_id: Optional[str] = None,
+               max_jobs: Optional[int] = None,
+               lease_s: float = 120.0, platform: Optional[str] = None,
+               build_k: int = DEFAULT_BUILD_K, top_k: int = 4,
+               stable: int = 2, iters: int = 3, warmup: int = 1,
+               idle_exit: bool = True, poll_s: float = 0.5) -> WorkReport:
+    """Claim-build-measure-commit until the queue runs dry.
+
+    Each job is one claim -> :class:`Builder` -> :class:`Evaluator` ->
+    ``complete`` round trip; any exception releases the job with
+    ``fail`` (back to pending under the attempts cap, so a transient
+    measurement error retries on another worker).  With ``idle_exit``
+    (the CLI default) the worker exits when nothing is claimable —
+    a long-lived fleet daemon would pass ``idle_exit=False`` and poll."""
+    from repro.tuning.queue import JobQueue, default_worker_id
+
+    queue = queue or JobQueue()
+    worker_id = worker_id or default_worker_id()
+    builder = Builder(build_k=build_k)
+    evaluator = Evaluator(top_k=top_k, stable=stable, iters=iters,
+                          warmup=warmup)
+    report = WorkReport(worker=worker_id)
+    t0 = time.perf_counter()
+    while max_jobs is None or report.done + report.failed < max_jobs:
+        job = queue.claim(worker_id, lease_s=lease_s, platform=platform)
+        if job is None:
+            if idle_exit:
+                break
+            time.sleep(poll_s)
+            continue
+        _crash_point("after-claim")
+        log.info("worker %s: claimed %s (priority %d, attempt %d)",
+                 worker_id, job.job_id, job.priority, job.attempts)
+        try:
+            built = builder.build(job)
+            _crash_point("after-build")
+            winner = evaluator.evaluate(built)
+        except Exception as e:  # noqa: BLE001 — release, let a retry happen
+            log.warning("worker %s: job %s failed (%s)", worker_id,
+                        job.job_id, e)
+            queue.fail(job.job_id, worker_id, error=f"{type(e).__name__}: {e}")
+            report.failed += 1
+            continue
+        if queue.complete(job.job_id, worker_id,
+                          result=winner.tuning_key()):
+            report.done += 1
+            report.results += ((job.job_id, winner.tuning_key()),)
+        else:
+            # lease expired under us and the job was reassigned: our
+            # measurement still landed in the measurement cache (pure
+            # gain), but the ledger credits the current holder
+            log.warning("worker %s: lost lease on %s before complete",
+                        worker_id, job.job_id)
+            report.failed += 1
+    report.seconds = time.perf_counter() - t0
+    return report
