@@ -1,0 +1,127 @@
+"""Degraded-serving benchmark (DESIGN.md §16).
+
+Serves the same deterministic open-loop trace twice — once healthy,
+once with the kernel ladder's top rung knocked out (every planned
+Pallas variant raises via the ``kernels.lower.*`` failpoints, so every
+dispatch lands on the blocked-XLA twin) — and reports the throughput
+cost of running one rung down the ladder.
+
+The ladder's core contract is checked inline, not just measured: every
+rung computes the SAME function (same blocking semantics, f32
+accumulation), so the degraded run must produce token-for-token
+identical streams.  A benchmark that silently changed results would be
+measuring the wrong thing; this one raises.
+
+    PYTHONPATH=src python -m benchmarks.degraded_serving [--smoke] \
+        [--json [PATH]]
+
+``--json`` writes ``benchmarks/artifacts/BENCH_10.json`` in the
+``run.py`` schema; CI uploads it alongside BENCH_5..9.
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from benchmarks.serving_slo import build_engine, poisson_trace
+
+DEFAULT_JSON = Path(__file__).resolve().parent / "artifacts" / "BENCH_10.json"
+
+# both planned orientations raise at lowering -> rung 2 (XLA twin) serves
+LADDER_FAULTS = ("kernels.lower.skinny=raise", "kernels.lower.tall=raise")
+
+
+def serve_once(cfg, rate: float, n_requests: int, seed: int,
+               max_batch: int, prepack: bool):
+    """One fresh engine + virtual-clock trace run; returns
+    ``(token_streams, stats, health)``."""
+    import os
+
+    import jax
+
+    from repro.serve.clock import VirtualClock
+    from repro.serve.frontend import AsyncEngine
+
+    # every run must actually TRACE (that is where the ladder runs): a
+    # warm AOT program cache or a jit-cache hit would serve the healthy
+    # lowering and the rung-2 run would measure nothing
+    os.environ["REPRO_PROGRAM_CACHE"] = "off"
+    jax.clear_caches()
+    _, eng = build_engine(max_batch=max_batch, max_prompt=64,
+                          max_len=4096, prepack=prepack)
+    trace = poisson_trace(cfg, n_requests, rate, seed)
+    afe = AsyncEngine(eng, queue_limit=64, prefill_budget=32,
+                      clock=VirtualClock())
+    streams, stats = afe.simulate(trace)
+    toks = {s.rid: list(s.tokens) for s in streams if not s.rejected}
+    return toks, stats, eng.health_report()
+
+
+def run(rate: float = 40.0, n_requests: int = 24, seed: int = 0,
+        max_batch: int = 4, prepack: bool = True):
+    from repro.configs import get_reduced_config
+    from repro.resilience import failpoints
+
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=512, d_ff=1024, num_layers=2, vocab_size=1024,
+        num_heads=8, num_kv_heads=8, head_dim=64)
+
+    failpoints.reset()
+    healthy_toks, healthy, h_health = serve_once(
+        cfg, rate, n_requests, seed, max_batch, prepack)
+    if not h_health["healthy"]:
+        raise SystemExit(f"healthy run degraded: {h_health['degradations']}")
+
+    failpoints.configure(";".join(LADDER_FAULTS))
+    try:
+        degraded_toks, degraded, d_health = serve_once(
+            cfg, rate, n_requests, seed, max_batch, prepack)
+    finally:
+        failpoints.reset()
+    demotions = d_health["degradations"]["by_seam"].get("kernel.variant", 0)
+    if degraded_toks != healthy_toks:
+        raise SystemExit("ladder rung 2 changed tokens — numerics contract "
+                         "broken (DESIGN.md §16)")
+
+    rows = []
+    for name, stats, extra in (("healthy", healthy, "demotions=0"),
+                               ("rung2_xla", degraded,
+                                f"demotions={demotions}")):
+        rows.append((
+            f"degraded_serving_{name}",
+            f"{1e6 / max(stats.tokens_per_s, 1e-9):.1f}",
+            f"tokens_per_s={stats.tokens_per_s:.0f}"
+            f"|generated={stats.generated_tokens}"
+            f"|admitted={stats.admitted}|{extra}|tokens_identical=yes"))
+    slow = (healthy.tokens_per_s / max(degraded.tokens_per_s, 1e-9))
+    rows.append(("degraded_serving_slowdown", f"{slow:.3f}",
+                 "healthy_tps/rung2_tps (virtual clock: cost model only)"))
+    return emit(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny trace (CI): 12 requests, no prepack")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", nargs="?", const=str(DEFAULT_JSON), default="",
+                    help="write rows as BENCH_10.json (run.py schema)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(n_requests=12, seed=args.seed, max_batch=2,
+                   prepack=False)
+    else:
+        rows = run(n_requests=args.requests, seed=args.seed)
+    if args.json:
+        out = write_bench_json(args.json, "BENCH_10",
+                               [("sec16_degraded_serving", rows)])
+        print(f"wrote {len(rows)} rows -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,7 @@ from typing import Optional
 import jax
 
 from repro.core.plan import Plan
+from repro.resilience import degrade, failpoints
 
 log = logging.getLogger(__name__)
 
@@ -164,10 +165,16 @@ def _read_json(path: Path) -> Optional[dict]:
     if not path.exists():
         return None
     try:
+        failpoints.fp("registry.load")
         with open(path) as f:
-            return json.load(f)
-    except (OSError, json.JSONDecodeError, TypeError):
-        return None  # mid-replace or corrupt: nothing mergeable
+            return json.loads(failpoints.corrupt("registry.load", f.read()))
+    except (OSError, json.JSONDecodeError, TypeError,
+            failpoints.InjectedFault) as e:
+        # torn/corrupt/unreadable: nothing mergeable — memory (and the
+        # next clean flush) stays authoritative
+        log.warning("registry: unreadable %s (%s); treating as empty",
+                    path, e)
+        return None
 
 
 def _fold_missing(path: Path, dest: dict, from_json) -> None:
@@ -276,8 +283,26 @@ class Registry:
     def _write_file(self, protect: frozenset = frozenset()) -> None:
         """Single atomic merge-then-write of the whole plan map (lock held)."""
         self._merge_disk(protect)
+        failpoints.fp("registry.flush.before_replace")
         _atomic_write_json(self.plan_path(),
                            {k: p.to_json() for k, p in self._mem.items()})
+
+    def _write_file_or_defer(self, protect: frozenset = frozenset()) -> bool:
+        """(lock held) plan flush with the §16 durability contract:
+        memory is authoritative, disk is best-effort — a failed write
+        (full disk, torn mount, injected fault) is a DEGRADATION, not a
+        serving error.  The plans stay in memory and the next flush
+        retries.  Returns True when the write landed."""
+        try:
+            self._write_file(protect)
+            return True
+        except (OSError, failpoints.InjectedFault) as e:
+            log.warning("registry: plan flush -> %s failed (%s); plans "
+                        "stay in memory until the next flush",
+                        self.plan_path(), e)
+            degrade.record("registry.flush", key=str(self.plan_path()),
+                           fallback="deferred", error=str(e))
+            return False
 
     def get(self, problem_key: str) -> Optional[Plan]:
         with self._lock:
@@ -330,7 +355,8 @@ class Registry:
             else:
                 self._mem[key] = plan
             if persist:
-                self._write_file(frozenset((key,)) if force else frozenset())
+                self._write_file_or_defer(
+                    frozenset((key,)) if force else frozenset())
             # the flush may itself have merged a measured winner from a
             # concurrent writer over our entry: report what stands NOW
             return self._mem.get(key, plan)
@@ -343,9 +369,17 @@ class Registry:
         with self._lock:
             if self._loaded_from is None:
                 self._load_file()
-            self._write_file()
+            self._write_file_or_defer()
             if self._meas:
-                self._write_measure_file()
+                try:
+                    self._write_measure_file()
+                except (OSError, failpoints.InjectedFault) as e:
+                    log.warning("registry: measurement flush -> %s failed "
+                                "(%s); records stay in memory",
+                                self.measure_path(), e)
+                    degrade.record("registry.flush",
+                                   key=str(self.measure_path()),
+                                   fallback="deferred", error=str(e))
 
     # -- measurements ---------------------------------------------------
 
@@ -362,6 +396,7 @@ class Registry:
         _fold_missing(self.measure_path(), self._meas,
                       MeasureRecord.from_json)
         self._prune_measurements_locked(measure_cache_max())
+        failpoints.fp("registry.measure.before_replace")
         _atomic_write_json(self.measure_path(),
                            {k: r.to_json() for k, r in self._meas.items()})
 
@@ -491,7 +526,24 @@ class Registry:
                                            r["last_seen"])}
             else:
                 raw[k] = {"count": r["count"], "last_seen": r["last_seen"]}
-        _atomic_write_json(path, raw)
+        try:
+            failpoints.fp("registry.misses.before_replace")
+            _atomic_write_json(path, raw)
+        except (OSError, failpoints.InjectedFault) as e:
+            # re-stash so the drained telemetry is not lost: the next
+            # flush (or the engine epilogue) retries with counts intact
+            with self._lock:
+                for r in drained:
+                    rec = self._missed.setdefault(
+                        r["key"], {"count": 0, "last_seen": 0.0})
+                    rec["count"] += r["count"]
+                    rec["last_seen"] = max(rec["last_seen"], r["last_seen"])
+            log.warning("registry: miss-log flush -> %s failed (%s); "
+                        "%d records re-stashed in memory", path, e,
+                        len(drained))
+            degrade.record("registry.misses", key=str(path),
+                           fallback="re-stashed", error=str(e))
+            return 0
         log.info("registry: flushed %d miss records -> %s", len(drained),
                  path)
         return len(drained)

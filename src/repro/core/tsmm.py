@@ -19,6 +19,7 @@ scale:
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 from typing import Optional
 
@@ -29,6 +30,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core import registry
+from repro.resilience import degrade, failpoints
 from repro.core.autotuner import (default_hw, make_plan, make_plan_set,
                                   plan_for_matmul)
 from repro.core.hw import TPU_V5E, HwSpec
@@ -38,6 +40,63 @@ from repro.core.plan import (Plan, Problem, ScheduleSpec, is_tsmm,
 from repro.core.vmem_model import feasible, predict
 from repro.kernels import ops, variants
 from repro.kernels.variants import KernelSpec
+
+log = logging.getLogger(__name__)
+
+
+def _gemm_epilogue(a2, w, bias, act, out_dtype):
+    """The unplanned fallback: plain XLA GEMM accumulating in f32 (like
+    every planned path) with a post-hoc epilogue — the bottom rung of
+    the §16 kernel ladder, always lowerable."""
+    out = jnp.dot(a2, w, preferred_element_type=jnp.float32).astype(out_dtype)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    if act is not None:
+        from repro.kernels.ref import act_ref
+        out = act_ref(out.astype(jnp.float32), act).astype(out.dtype)
+    return out
+
+
+def _laddered(orientation: str, breaker_key: str, planned, xla_twin, gemm):
+    """Run one planned TSMM down the §16 degradation ladder.
+
+    Planning happens at trace time, so a variant whose Pallas lowering
+    fails raises HERE — catchable — and the call demotes: planned
+    variant -> the same blocked structure as an XLA twin -> unplanned
+    GEMM + epilogue.  Numerics are preserved at every rung (all three
+    accumulate in f32); only speed degrades — each demotion is counted
+    on the ambient :class:`~repro.resilience.degrade.DegradeStats`.  The
+    circuit breaker stops re-attempting a deterministically-failing
+    variant key after K failures and pins its fallback."""
+    stats = degrade.current()
+    breaker = stats.breaker
+    if breaker.allow(breaker_key):
+        try:
+            failpoints.fp(f"kernels.lower.{orientation}")
+            out = planned()
+            breaker.success(breaker_key)
+            return out
+        except Exception as e:  # noqa: BLE001 — lowering/compile failure
+            opened = breaker.failure(breaker_key)
+            log.warning("tsmm: planned %s variant failed for %s (%s); "
+                        "degrading to XLA twin%s", orientation, breaker_key,
+                        e, " [breaker OPEN: fallback pinned]" if opened
+                        else "")
+            stats.record("kernel.variant", key=breaker_key, fallback="xla",
+                         error=str(e))
+    else:
+        # breaker open: the planned variant is known-bad — serve the
+        # pinned fallback without paying the failed attempt again
+        stats.record("kernel.pinned", key=breaker_key, fallback="xla")
+    try:
+        failpoints.fp(f"kernels.xla.{orientation}")
+        return xla_twin()
+    except Exception as e:  # noqa: BLE001
+        log.warning("tsmm: blocked-XLA twin failed for %s (%s); degrading "
+                    "to unplanned GEMM", breaker_key, e)
+        stats.record("kernel.xla", key=breaker_key, fallback="gemm",
+                     error=str(e))
+        return gemm()
 
 
 def impl_choice() -> str:
@@ -145,10 +204,17 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
             sched = cached.schedule if cached is not None else None
         spec = _override_spec(spec, override, "skinny_a")
         sched = sched_override or sched
-        out = variants.run_skinny_a(spec, a2, b.blocks, bias, act,
-                                    bk=bk, bn=bn, packed=True, impl=impl,
-                                    schedule=sched)
-        out = out[:, : b.orig_cols]
+
+        def _packed(use_impl):
+            return variants.run_skinny_a(
+                spec, a2, b.blocks, bias, act, bk=bk, bn=bn, packed=True,
+                impl=use_impl, schedule=sched)[:, : b.orig_cols]
+
+        out = _laddered(
+            "skinny", f"skinny_a/{m}x{k}x{b.orig_cols}/{spec.key()}",
+            lambda: _packed(impl),
+            lambda: _packed("xla"),
+            lambda: _gemm_epilogue(a2, b.unpack(), bias, act, a.dtype))
         return out.reshape(*lead, b.orig_cols)
 
     n = b.shape[-1]
@@ -157,25 +223,40 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
     if plan is not None and plan.orientation == "skinny_a":
         spec = _override_spec(plan.kernel, override, "skinny_a")
         sched = sched_override or plan.schedule
-        out = variants.run_skinny_a(spec, a2, b, bias, act, bk=plan.bk,
-                                    bn=plan.bn, packed=False, impl=impl,
-                                    schedule=sched)
-        return out[:, :n].reshape(*lead, n)
+
+        def _skinny(use_impl):
+            return variants.run_skinny_a(
+                spec, a2, b, bias, act, bk=plan.bk, bn=plan.bn,
+                packed=False, impl=use_impl, schedule=sched)[:, :n]
+
+        out = _laddered(
+            "skinny", f"skinny_a/{m}x{k}x{n}/{spec.key()}",
+            lambda: _skinny(impl),
+            lambda: _skinny("xla"),
+            lambda: _gemm_epilogue(a2, b, bias, act, a.dtype))
+        return out.reshape(*lead, n)
     if plan is not None and plan.orientation == "tall_a":
         # bias/activation fuse into the variant's epilogue (DESIGN.md
         # §11): the prefill path executes act(A@B + bias) in ONE kernel —
         # no post-hoc pass, no extra (m, n) round trip over HBM
         spec = _override_spec(plan.kernel, override, "tall_a")
         sched = sched_override or plan.schedule
-        if plan.prepack:
-            ap = pack(a2, plan.bm, plan.bk)
-            out = variants.run_tall_a(spec, ap.blocks, b, bias, act,
-                                      bm=plan.bm, bk=plan.bk, packed=True,
-                                      impl=impl, schedule=sched)[:m, :n]
-        else:
-            out = variants.run_tall_a(spec, a2, b, bias, act, bm=plan.bm,
-                                      bk=plan.bk, packed=False, impl=impl,
-                                      schedule=sched)
+
+        def _tall(use_impl):
+            if plan.prepack:
+                ap = pack(a2, plan.bm, plan.bk)
+                return variants.run_tall_a(
+                    spec, ap.blocks, b, bias, act, bm=plan.bm, bk=plan.bk,
+                    packed=True, impl=use_impl, schedule=sched)[:m, :n]
+            return variants.run_tall_a(
+                spec, a2, b, bias, act, bm=plan.bm, bk=plan.bk,
+                packed=False, impl=use_impl, schedule=sched)
+
+        out = _laddered(
+            "tall", f"tall_a/{m}x{k}x{n}/{spec.key()}",
+            lambda: _tall(impl),
+            lambda: _tall("xla"),
+            lambda: _gemm_epilogue(a2, b, bias, act, a.dtype))
         return out.reshape(*lead, n)
     # unplanned fallback: accumulate in f32 like every planned path
     # (ops.tsmm* all pass preferred_element_type) so bf16 results do not
@@ -183,13 +264,7 @@ def tsmm_dot(a, b, *, bias=None, act: Optional[str] = None,
     # path left with a post-hoc epilogue — XLA fuses it into the dot's
     # consumer within the surrounding jit, and non-TSMM shapes are
     # compute-bound anyway (DESIGN.md §2).
-    out = jnp.dot(a2, b, preferred_element_type=jnp.float32).astype(a.dtype)
-    if bias is not None:
-        out = out + bias.astype(out.dtype)
-    if act is not None:
-        from repro.kernels.ref import act_ref
-        out = act_ref(out.astype(jnp.float32), act).astype(out.dtype)
-    return out.reshape(*lead, n)
+    return _gemm_epilogue(a2, b, bias, act, a.dtype).reshape(*lead, n)
 
 
 def prepack_for(m_skinny, w, *, num_shards: int = 1,

@@ -91,6 +91,11 @@ def main():
                     help="exit 1 if serving logged ANY registry miss or "
                          "traced ANY program — the fleet 'restart is "
                          "lookup-only' CI gate")
+    ap.add_argument("--health", action="store_true",
+                    help="print the engine's resilience health report "
+                         "(DESIGN.md §16 degradation ladder) after serving "
+                         "and exit 1 if ANY ladder demotion fired — the "
+                         "'happy path serves undegraded' CI gate")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--trace", default="",
                     help="comma-separated request groups: sizes (3,17,64) "
@@ -210,6 +215,15 @@ def main():
                 f"--require-warm: serving was NOT lookup-only "
                 f"({s['misses']} registry misses, {ps['traced']} traced "
                 f"programs) — stale find-db or program cache?")
+        if args.health:
+            import json as _json
+            hr = eng.health_report()
+            print("-- health report (DESIGN.md §16) --")
+            print(_json.dumps(hr, indent=2, default=str))
+            if not hr["healthy"]:
+                raise SystemExit(
+                    f"--health: {hr['degradations']['total']} degradation(s) "
+                    f"fired — serving ran off the ladder, not the plan")
 
     if args.async_mode:
         from repro.serve.clock import VirtualClock

@@ -47,7 +47,9 @@ def _queue(args):
 def cmd_harvest(args) -> int:
     from repro.tuning.queue import harvest
     counts = harvest(_queue(args), miss_path=args.miss_log or None,
-                     top_candidates=args.top_candidates)
+                     top_candidates=args.top_candidates,
+                     expire_after_s=(args.expire_after
+                                     if args.expire_after > 0 else None))
     print("harvest: " + json.dumps(counts))
     return 0
 
@@ -127,6 +129,11 @@ def main(argv=None):
                    help="miss file (default REPRO_MISS_LOG)")
     h.add_argument("--top-candidates", type=int, default=16,
                    help="model-ranked grammar candidates per job payload")
+    h.add_argument("--expire-after", type=float, default=0.0,
+                   help="drop PENDING jobs whose problem has not been "
+                        "seen in a miss log for this many seconds (0 = "
+                        "never) — keeps a long-lived fleet queue from "
+                        "accumulating shapes the fleet stopped serving")
 
     w = sub.add_parser("work", help="run builder/evaluator workers")
     w.add_argument("--workers", type=int, default=1)

@@ -1,0 +1,19 @@
+"""Resilience plane (DESIGN.md §16): failpoint injection + degradation.
+
+Two halves, deliberately dependency-free (stdlib only) so every layer of
+the stack — registry, program store, tuning queue, workers, kernels,
+serving front end — can import them without cycles:
+
+* :mod:`repro.resilience.failpoints` — named fault-injection sites
+  (``fp("registry.flush.before_replace")``) armed from the environment
+  or programmatically; OFF by default with near-zero overhead.
+* :mod:`repro.resilience.degrade` — the degradation ladder bookkeeping:
+  a :class:`DegradeStats` sink counting every demotion (planned kernel →
+  XLA twin → GEMM, disk program → retrace, find-db → local plans, flush
+  → deferred) plus the circuit breaker that pins a fallback after K
+  failures.  Surfaced by ``Engine.health_report()``.
+"""
+
+from repro.resilience import degrade, failpoints  # noqa: F401
+from repro.resilience.degrade import DegradeStats  # noqa: F401
+from repro.resilience.failpoints import InjectedFault, fp  # noqa: F401

@@ -1,0 +1,151 @@
+"""Degradation-ladder bookkeeping (DESIGN.md §16).
+
+Every seam in the stack has a defined fallback instead of an unhandled
+exception; this module is where the demotions are *counted* so an
+operator can tell a healthy engine from one quietly limping:
+
+====================  =========================================  ==============
+seam                  healthy                                    degraded to
+====================  =========================================  ==============
+``kernel.variant``    planned Pallas variant                     blocked-XLA twin
+``kernel.xla``        blocked-XLA twin                           unplanned GEMM
+``kernel.pinned``     (breaker open: planned not retried)        pinned fallback
+``program.disk``      AOT program deserialized from disk         retrace+compile
+``program.persist``   compiled program persisted                 memory-only
+``registry.flush``    plan/measurement map flushed to disk       deferred (memory
+                                                                 stays authoritative)
+``registry.misses``   miss log persisted                         re-stashed in memory
+``registry.find_db``  read-only find-db overlay                  local plans only
+``queue.file``        queue JSON loaded                          quarantined + reset
+====================  =========================================  ==============
+
+:class:`DegradeStats` is the per-engine sink (``Engine.health_report()``
+surfaces it); a contextvar makes the active engine's sink reachable from
+module-level code (``tsmm_dot``, the program store, the registry)
+without threading a handle through every call.  Code that runs outside
+any engine (install sweeps, CLIs) records into a process-global sink.
+
+The :class:`CircuitBreaker` stops retrying a persistently-failing
+variant/program key after ``threshold`` consecutive failures and pins
+its fallback: a kernel whose lowering fails deterministically would
+otherwise pay the failed attempt on every trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+BREAKER_THRESHOLD_DEFAULT = 3
+MAX_EVENTS = 128                         # bounded event ring for reports
+
+
+class CircuitBreaker:
+    """Per-key consecutive-failure counter; opens at ``threshold``."""
+
+    def __init__(self, threshold: int = BREAKER_THRESHOLD_DEFAULT):
+        self.threshold = int(threshold)
+        self._lock = threading.Lock()
+        self._failures: Dict[str, int] = {}
+        self._open: set = set()
+
+    def allow(self, key: str) -> bool:
+        """False once the key's breaker is open (fallback pinned)."""
+        return key not in self._open
+
+    def failure(self, key: str) -> bool:
+        """Record one failure; returns True when this opens the breaker."""
+        with self._lock:
+            n = self._failures.get(key, 0) + 1
+            self._failures[key] = n
+            if n >= self.threshold and key not in self._open:
+                self._open.add(key)
+                return True
+        return False
+
+    def success(self, key: str) -> None:
+        """A clean pass resets the consecutive-failure count."""
+        with self._lock:
+            self._failures.pop(key, None)
+
+    def report(self) -> dict:
+        with self._lock:
+            return {"threshold": self.threshold,
+                    "open": sorted(self._open),
+                    "failures": dict(self._failures)}
+
+
+@dataclasses.dataclass
+class DegradeEvent:
+    seam: str
+    key: str = ""
+    fallback: str = ""
+    error: str = ""
+
+
+class DegradeStats:
+    """Counts every ladder demotion; one per Engine (plus one global)."""
+
+    def __init__(self, *, breaker_threshold: int = BREAKER_THRESHOLD_DEFAULT):
+        self._lock = threading.Lock()
+        self.counts: Dict[str, int] = {}
+        self.events: List[DegradeEvent] = []
+        self.breaker = CircuitBreaker(breaker_threshold)
+
+    def record(self, seam: str, *, key: str = "", fallback: str = "",
+               error: str = "") -> None:
+        with self._lock:
+            self.counts[seam] = self.counts.get(seam, 0) + 1
+            if len(self.events) < MAX_EVENTS:
+                self.events.append(DegradeEvent(seam, key, fallback,
+                                                str(error)[:200]))
+
+    @property
+    def total(self) -> int:
+        with self._lock:
+            return sum(self.counts.values())
+
+    def report(self) -> dict:
+        with self._lock:
+            return {
+                "total": sum(self.counts.values()),
+                "by_seam": dict(self.counts),
+                "breaker": self.breaker.report(),
+                "events": [dataclasses.asdict(e)
+                           for e in self.events[-16:]],
+            }
+
+
+# -- ambient sink --------------------------------------------------------
+
+GLOBAL = DegradeStats()
+_CTX: contextvars.ContextVar = contextvars.ContextVar("degrade_stats",
+                                                      default=None)
+
+
+def current() -> DegradeStats:
+    """The active engine's sink, or the process-global one."""
+    return _CTX.get() or GLOBAL
+
+
+@contextlib.contextmanager
+def use(stats: DegradeStats):
+    """Route module-level ``record()`` calls to ``stats``.  Reset is
+    token-tolerant: the §12 front end may enter in one asyncio task and
+    close in another (same pattern as ``sharding_ctx``)."""
+    token = _CTX.set(stats)
+    try:
+        yield stats
+    finally:
+        try:
+            _CTX.reset(token)
+        except ValueError:               # crossed an asyncio task boundary
+            _CTX.set(None)
+
+
+def record(seam: str, *, key: str = "", fallback: str = "",
+           error: str = "") -> None:
+    current().record(seam, key=key, fallback=fallback, error=error)

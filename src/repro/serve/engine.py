@@ -38,6 +38,7 @@ from jax.sharding import Mesh
 from repro.core.plan import BucketGrid, Problem, bucket_for, buckets_for, \
     length_buckets_for
 from repro.core.tsmm import prepack_for
+from repro.resilience import degrade
 from repro.serve.clock import StepCost, ensure_clock
 from repro.serve.programs import ProgramStore
 from repro.models.param import is_axes_leaf
@@ -265,6 +266,10 @@ class Engine:
         # engine/scheduler charge step_cost instead of measuring)
         self.clock = ensure_clock(clock)
         self.step_cost = step_cost or StepCost()
+        # §16 resilience plane: every ladder demotion on this engine's
+        # serving paths (kernel fallback, disk-program retrace, deferred
+        # registry flush, ...) is counted here; health_report() reads it
+        self.degrade = degrade.DegradeStats()
         self.tuner: Optional[_BackgroundTuner] = None
         # fleet mode (DESIGN.md §15): with a tune_queue attached (or
         # REPRO_TUNE_QUEUE set) the fleet's workers own measurement.
@@ -306,8 +311,9 @@ class Engine:
             length_buckets_for(min(max_prompt or max_len, max_len),
                                min_prompt))
         if prepack:
-            params, report = pack_tree_for_serving(
-                params, axes, self.buckets, mesh, self.opts)
+            with degrade.use(self.degrade):
+                params, report = pack_tree_for_serving(
+                    params, axes, self.buckets, mesh, self.opts)
             log.info("pre-packed %d weight leaves for buckets %s",
                      len(report), self.buckets)
             self.pack_report = report
@@ -408,10 +414,11 @@ class Engine:
         and the workers do the measuring.  A no-op when nothing missed,
         so warm lookup-only serving never touches the file."""
         from repro.core import registry
-        if self.tuner is None:
-            registry.flush_misses()
-            return
-        keys = registry.drain_misses()
+        with degrade.use(self.degrade):
+            if self.tuner is None:
+                registry.flush_misses()
+                return
+            keys = registry.drain_misses()
         if keys:
             log.info("background-tuning %d registry misses", len(keys))
             self.tuner.submit(keys)
@@ -464,7 +471,8 @@ class Engine:
         width = batch["tokens"].shape[-1]
         compile_s = 0.0
         from repro.core.linear import serving_ctx
-        with serving_ctx(), sharding_ctx(self.mesh, self.opts):
+        with serving_ctx(), sharding_ctx(self.mesh, self.opts), \
+                degrade.use(self.degrade):
             cache = self.new_cache(bucket)
             batch = self.place_batch(batch)
             # a cold (bucket, prompt-shape) program acquire is AOT
@@ -588,3 +596,21 @@ class Engine:
         out = ContinuousScheduler(self, slots=slots).run(requests)
         self._drain_misses()
         return out
+
+    # -- resilience telemetry (DESIGN.md §16) ---------------------------
+
+    def health_report(self) -> dict:
+        """One dict answering "is this engine serving at full fidelity?":
+        every degradation-ladder demotion since construction (zero on a
+        healthy run — the ``serve --health`` CI contract), the circuit
+        breaker's open keys, any armed failpoints, and the program-store
+        counters.  Shape is stable for automation; ``launch/serve.py
+        --health`` pretty-prints it and exits non-zero on degradations."""
+        from repro.resilience import failpoints
+        rep = self.degrade.report()
+        return {
+            "healthy": rep["total"] == 0,
+            "degradations": rep,
+            "failpoints": failpoints.report(),
+            "programs": self.programs.stats(),
+        }

@@ -27,7 +27,13 @@ end, built on the step-driven :class:`~repro.serve.scheduler
   under the global position clock);
 * **per-request token streaming** — every generated token is pushed to
   the request's :class:`TokenStream` with a clock timestamp
-  (``async for tok in stream`` in asyncio mode).
+  (``async for tok in stream`` in asyncio mode);
+* **deadlines + cooperative cancellation** (§16) — a request carrying
+  ``Request.deadline`` (absolute clock seconds) is cancelled at the
+  first tick past it: dropped from the queue, or reclaimed MID-decode
+  so its slot admits the next request immediately.  ``stream.cancel()``
+  does the same on demand.  ``submit_retry`` wraps ``submit`` in
+  bounded exponential backoff for transient admission failures.
 
 Two drivers share the exact same admission/step methods:
 ``simulate(trace)`` runs an open-loop trace on a
@@ -48,6 +54,7 @@ import math
 from collections import deque
 from typing import List, Optional
 
+from repro.resilience import failpoints
 from repro.serve.clock import StepCost
 from repro.serve.scheduler import ContinuousScheduler, Request, StreamResult
 
@@ -79,6 +86,9 @@ class TokenStream:
     finish_time: float = math.nan
     queue_steps: int = 0                 # decode steps waited
     result: Optional[StreamResult] = None
+    deadline: Optional[float] = None     # absolute clock seconds (§16)
+    cancel_requested: bool = False       # set by cancel(); acted on at tick
+    cancelled: bool = False              # reaped before finishing
     _q: object = None                    # asyncio.Queue, made lazily
 
     @property
@@ -98,6 +108,12 @@ class TokenStream:
     def done(self) -> bool:
         """Terminal: finished, truncated, rejected, or dropped."""
         return not math.isnan(self.finish_time)
+
+    def cancel(self) -> None:
+        """Cooperative cancel: takes effect at the next scheduler tick —
+        queued streams are dropped, running streams reclaimed (tokens
+        emitted so far stay on the stream, ``completed`` is False)."""
+        self.cancel_requested = True
 
     def _queue(self):
         if self._q is None:
@@ -184,7 +200,7 @@ class AsyncEngine:
             rid=req.rid if req.rid is not None else self._seq,
             tenant=req.tenant, priority=req.priority,
             arrival_time=req.arrival_time, prompt_len=int(toks.shape[0]),
-            length_bucket=lb)
+            length_bucket=lb, deadline=req.deadline)
         if self._pending >= self.queue_limit:
             stream.rejected = True
             self.stats.rejected += 1
@@ -203,12 +219,37 @@ class AsyncEngine:
         return stream
 
     async def submit(self, req: Request) -> TokenStream:
+        try:
+            failpoints.fp("frontend.admit", clock=self.clock)
+        except failpoints.InjectedFault as e:
+            raise AdmissionError(f"transient admission failure: {e}")
         stream = self.submit_nowait(req)
         if stream.rejected:
             raise AdmissionError(
                 f"queue full ({self.queue_limit} pending); request "
                 f"{stream.rid!r} rejected")
         return stream
+
+    async def submit_retry(self, req: Request, *, retries: int = 3,
+                           backoff_s: float = 0.01,
+                           factor: float = 2.0) -> TokenStream:
+        """``submit`` with bounded exponential backoff for transient
+        admission failures (queue momentarily full, injected
+        ``frontend.admit`` fault).  Backoff sleeps on the engine clock,
+        so virtual-clock tests stay deterministic.  Re-raises the last
+        :class:`AdmissionError` after ``retries`` re-attempts."""
+        delay = backoff_s
+        last: Optional[AdmissionError] = None
+        for attempt in range(retries + 1):
+            try:
+                return await self.submit(req)
+            except AdmissionError as e:
+                last = e
+                if attempt == retries:
+                    break
+                await self.clock.sleep(delay)
+                delay *= factor
+        raise last
 
     # -- scheduling policy ----------------------------------------------
 
@@ -282,6 +323,52 @@ class AsyncEngine:
             if tag is not None:
                 tag._finish(res, self.clock.now(), res.completed)
 
+    def _reap(self) -> None:
+        """Cancellation / deadline pass (§16), run at the top of every
+        tick: doomed QUEUED entries are dropped in place (deque order of
+        the survivors preserved — policy untouched when nothing is
+        doomed), doomed RUNNING streams are reclaimed mid-decode via
+        ``ContinuousScheduler.cancel`` so their slot admits the next
+        request this same tick."""
+        now = self.clock.now()
+
+        def doomed(s: TokenStream):
+            if s.cancel_requested:
+                return "cancel"
+            if s.deadline is not None and now >= s.deadline:
+                return "deadline"
+            return None
+
+        for tenants in self._tiers.values():
+            for dq in tenants.values():
+                for _ in range(len(dq)):
+                    e = dq.popleft()
+                    why = doomed(e["stream"])
+                    if why is None:
+                        dq.append(e)
+                        continue
+                    self._pending -= 1
+                    self.stats.cancelled += 1
+                    if why == "deadline":
+                        self.stats.expired += 1
+                    s = e["stream"]
+                    s.cancelled = True
+                    s._finish(None, now, False)
+        # running rows: st["tag"] is the TokenStream handle the admit
+        # phase passed (None under drivers that don't stream)
+        for st in list(self.sched.active.values()):
+            s = st["tag"]
+            if s is None:
+                continue
+            why = doomed(s)
+            if why is None:
+                continue
+            tag, res = self.sched.cancel(st)  # counts stats.cancelled
+            if why == "deadline":
+                self.stats.expired += 1
+            s.cancelled = True
+            self._deliver([], [(tag, res)])
+
     def _drop_pending(self) -> None:
         """Cache capacity is spent: nothing queued can ever start."""
         while self._pending:
@@ -294,6 +381,7 @@ class AsyncEngine:
         """One scheduler iteration: budgeted admission, then — if a
         batch is live — either one lockstep decode step or, when the
         cache clock is spent, truncation of every live stream."""
+        self._reap()
         self._admit_phase()
         if self.sched.active:
             if self.sched.exhausted():

@@ -50,6 +50,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.variants import grammar as _grammar
+from repro.resilience import degrade, failpoints
 from repro.sharding.context import ShardCtx, sharding_ctx
 from repro.sharding.rules import ShardingOptions
 
@@ -317,13 +318,18 @@ class ProgramStore:
             return None
         try:
             from jax.experimental import serialize_executable as se
-            rec = pickle.loads(path.read_bytes())
+            failpoints.fp("programs.deserialize")
+            rec = pickle.loads(failpoints.corrupt("programs.deserialize",
+                                                  path.read_bytes()))
             if rec.get("schema") != PROGRAM_SCHEMA:
                 return None
             return se.deserialize_and_load(*rec["payload"])
         except Exception as e:  # noqa: BLE001 — any failure = recompile
             log.warning("program cache: dropping unreadable %s (%s)",
                         path.name, e)
+            # rung of the §16 ladder: AOT disk program -> retrace
+            degrade.record("program.disk", key=key, fallback="retrace",
+                           error=str(e))
             return None
 
     def _save(self, key: str, kind: str, compiled) -> None:
@@ -337,12 +343,15 @@ class ProgramStore:
                    "jax": jax.__version__,
                    "backend": jax.default_backend(), "payload": payload}
             path.parent.mkdir(parents=True, exist_ok=True)
+            failpoints.fp("programs.serialize.before_replace")
             fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
             with os.fdopen(fd, "wb") as f:
                 pickle.dump(rec, f)
             os.replace(tmp, path)      # atomic: concurrent warmers race safely
         except Exception as e:  # noqa: BLE001 — persistence is best-effort
             log.warning("program cache: could not persist %s (%s)", key, e)
+            degrade.record("program.persist", key=key,
+                           fallback="memory-only", error=str(e))
 
     # -- telemetry -------------------------------------------------------
 

@@ -85,6 +85,10 @@ class Request:
     arrival_time: float = 0.0           # clock seconds (open-loop traces)
     priority: int = 0                   # 0 = most urgent tier
     tenant: str = "default"             # fairness domain within a tier
+    # absolute clock-seconds budget (§16): past this instant the stream
+    # is expired — cancelled in queue, or reclaimed mid-decode.  None
+    # (the default) keeps pre-§16 behavior byte-identical.
+    deadline: Optional[float] = None
 
     def to_json(self) -> dict:
         return {
@@ -95,6 +99,7 @@ class Request:
             "arrival_time": self.arrival_time,
             "priority": self.priority,
             "tenant": self.tenant,
+            "deadline": self.deadline,
         }
 
     @staticmethod
@@ -109,6 +114,8 @@ class Request:
             arrival_time=float(d.get("arrival_time", 0.0)),
             priority=int(d.get("priority", 0)),
             tenant=str(d.get("tenant", "default")),
+            deadline=(None if d.get("deadline") is None
+                      else float(d["deadline"])),
         )
 
 
@@ -159,6 +166,8 @@ class SchedulerStats:
     completed: int = 0
     unserved: int = 0                   # ran out of cache capacity
     rejected: int = 0                   # admission control (queue bound)
+    cancelled: int = 0                  # cooperative cancel (§16)
+    expired: int = 0                    # deadline passed (subset counter)
     prompt_tokens: int = 0              # real prompt tokens prefilled
     prompt_pad_tokens: int = 0          # left-pad tokens prefilled
     generated_tokens: int = 0
@@ -219,6 +228,8 @@ class SchedulerStats:
             ("completed", self.completed),
             ("unserved", self.unserved),
             ("rejected", self.rejected),
+            ("cancelled", self.cancelled),
+            ("expired", self.expired),
             ("generated_tokens", self.generated_tokens),
             ("prompt_tokens", self.prompt_tokens),
             ("prompt_pad_tokens", self.prompt_pad_tokens),
@@ -315,9 +326,14 @@ class ContinuousScheduler:
         self.free = list(range(B))
         self.feed = np.zeros((B,), np.int32)  # next token fed per row
         from repro.core.linear import serving_ctx
+        from repro.resilience import degrade
         self._stack = contextlib.ExitStack()
         self._stack.enter_context(serving_ctx())
         self._stack.enter_context(sharding_ctx(eng.mesh, eng.opts))
+        # route §16 ladder demotions on this serving path to the engine's
+        # DegradeStats (health_report); token-tolerant like sharding_ctx
+        self._stack.enter_context(
+            degrade.use(getattr(eng, "degrade", None) or degrade.GLOBAL))
         self._opened = True
 
     def close(self) -> SchedulerStats:
@@ -465,6 +481,17 @@ class ContinuousScheduler:
             if self._finished(st):
                 finished.append((st["tag"], self._retire(st)))
         return emitted, finished
+
+    def cancel(self, st):
+        """Retire one RUNNING stream early (§16 cooperative cancel /
+        deadline expiry): its row frees immediately and gets reused by
+        the next admission, the tokens emitted so far are returned as a
+        ``completed=False`` result.  The cache rows it wrote stay behind
+        ``valid_from`` masking on reuse, so other streams are unaffected.
+        """
+        res = self._retire(st, completed=False)
+        self.stats.cancelled += 1
+        return st["tag"], res
 
     def truncate(self):
         """Capacity ran out mid-flight: retire every live stream with

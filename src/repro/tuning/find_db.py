@@ -39,6 +39,8 @@ import time
 from pathlib import Path
 from typing import Optional
 
+from repro.resilience import degrade, failpoints
+
 log = logging.getLogger(__name__)
 
 FIND_DB_SCHEMA = 1
@@ -149,11 +151,18 @@ def read_find_db(path=None, *, platform: Optional[str] = None,
         if strict:
             raise ValueError(f"find-db {path}: {msg}")
         log.warning("find-db %s ignored: %s", path, msg)
+        # serving keeps going on local/model-ranked plans only — a
+        # counted degradation, not an error (DESIGN.md §16)
+        degrade.record("registry.find_db", key=str(path),
+                       fallback="local-plans", error=msg)
         return {}
 
     try:
-        blob = json.loads(path.read_text())
-    except (OSError, json.JSONDecodeError) as e:
+        failpoints.fp("finddb.read")
+        blob = json.loads(failpoints.corrupt("finddb.read",
+                                             path.read_text()))
+    except (OSError, json.JSONDecodeError,
+            failpoints.InjectedFault) as e:
         return problem(f"unreadable ({e})")
     header = blob.get("header", {})
     if header.get("schema") != FIND_DB_SCHEMA:

@@ -28,11 +28,15 @@ import dataclasses
 import json
 import logging
 import os
+import shutil
 import socket
 import tempfile
 import time
+import uuid
 from pathlib import Path
 from typing import Callable, Iterable, Optional
+
+from repro.resilience import degrade, failpoints
 
 log = logging.getLogger(__name__)
 
@@ -111,42 +115,97 @@ class _FileLock:
     that works on the same NFS-ish filesystems the registry's atomic
     replace assumes).  A lock directory older than ``stale_s`` belongs
     to a crashed holder and is broken — claims must never deadlock on a
-    worker that died mid-mutation."""
+    worker that died mid-mutation.
+
+    Ownership is a unique token file inside the lock directory.  The old
+    break path (unlink owner + rmdir) let TWO breakers both "succeed":
+    breaker A removes the stale dir and re-creates it as its own lock,
+    then breaker B — still acting on its stale read — removes A's FRESH
+    lock, and a third process walks into A's critical section.  Two
+    rules close the race:
+
+    * a stale lock is broken by ``rename`` to a unique trash name —
+      rename is atomic, so exactly one breaker wins and the losers see
+      FileNotFoundError and go back to the mkdir race;
+    * after ``mkdir`` succeeds the holder writes its token and RE-READS
+      it; release (and any future break) only removes a directory whose
+      token file still matches — a holder whose lock was stolen retries
+      instead of deleting the thief's lock."""
 
     def __init__(self, path: Path, *, timeout_s: float = 10.0,
                  stale_s: float = 30.0):
         self.path = path
         self.timeout_s = timeout_s
         self.stale_s = stale_s
+        self.token = (f"{socket.gethostname()}:{os.getpid()}:"
+                      f"{uuid.uuid4().hex}")
+
+    def _owner(self) -> Optional[str]:
+        try:
+            return (self.path / "owner").read_text()
+        except OSError:
+            return None
 
     def __enter__(self):
         deadline = time.monotonic() + self.timeout_s
         while True:
+            failpoints.fp("queue.lock.acquire")
             try:
                 os.mkdir(self.path)
-                try:
-                    (self.path / "owner").write_text(
-                        f"{socket.gethostname()}:{os.getpid()}")
-                except OSError:
-                    pass
-                return self
             except FileExistsError:
                 try:
                     age = time.time() - self.path.stat().st_mtime
                 except OSError:
                     continue            # released between check and stat
                 if age > self.stale_s:
-                    log.warning("breaking stale queue lock %s (%.0fs old)",
-                                self.path, age)
-                    self._break()
+                    self._break_stale(age)
                     continue
                 if time.monotonic() > deadline:
                     raise TimeoutError(
                         f"queue lock {self.path} held for > "
                         f"{self.timeout_s}s (stale_s={self.stale_s})")
                 time.sleep(0.005)
+            else:
+                try:
+                    (self.path / "owner").write_text(self.token)
+                except OSError:
+                    pass
+                # re-verify: a racing breaker with a stale view may have
+                # renamed our fresh dir away between mkdir and the token
+                # write — if the token on disk is not ours, we hold
+                # nothing and must retry, never proceed
+                if self._owner() == self.token:
+                    return self
+                time.sleep(0.001)
 
-    def _break(self) -> None:
+    def _break_stale(self, age: float) -> None:
+        trash = self.path.with_name(
+            self.path.name + f".stale.{os.getpid()}.{uuid.uuid4().hex}")
+        try:
+            os.rename(self.path, trash)  # atomic: one breaker wins
+        except OSError:
+            return                       # lost the race (or released)
+        # re-verify on the instance we actually captured: our pre-rename
+        # stat may have been a stale view of a lock that was broken and
+        # re-created fresh in the meantime — give a misfired steal back
+        try:
+            fresh = time.time() - trash.stat().st_mtime <= self.stale_s
+        except OSError:
+            fresh = False
+        if fresh:
+            try:
+                os.rename(trash, self.path)
+                return
+            except OSError:
+                pass                     # name re-taken: trash it below
+        else:
+            log.warning("broke stale queue lock %s (%.0fs old)",
+                        self.path, age)
+        shutil.rmtree(trash, ignore_errors=True)
+
+    def __exit__(self, *exc):
+        if self._owner() != self.token:
+            return                       # stolen while we slept: not ours
         try:
             (self.path / "owner").unlink()
         except OSError:
@@ -155,9 +214,6 @@ class _FileLock:
             os.rmdir(self.path)
         except OSError:
             pass
-
-    def __exit__(self, *exc):
-        self._break()
 
 
 class JobQueue:
@@ -188,15 +244,38 @@ class JobQueue:
                          timeout_s=self.lock_timeout_s,
                          stale_s=self.stale_lock_s)
 
+    def _quarantine(self, path: Path, why) -> None:
+        """A torn/corrupt queue file never raises into callers and never
+        gets silently clobbered either: it is renamed aside (forensics)
+        with a warning, and the queue restarts empty — jobs are re-derived
+        from the next harvest, so the loss is re-measured work, not
+        correctness (DESIGN.md §16)."""
+        side = path.with_name(path.name + ".corrupt")
+        try:
+            os.replace(path, side)
+        except OSError:
+            side = None
+        log.warning("queue: unreadable %s (%s); %s", path, why,
+                    f"quarantined to {side}" if side else "starting empty")
+        degrade.record("queue.file", key=str(path), fallback="reset",
+                       error=str(why))
+
     def _load(self) -> dict:
         path = self.path()
         if not path.exists():
             return {}
         try:
-            raw = json.loads(path.read_text())
-        except (OSError, json.JSONDecodeError):
+            failpoints.fp("queue.load")
+            raw = json.loads(failpoints.corrupt("queue.load",
+                                                path.read_text()))
+        except (OSError, json.JSONDecodeError,
+                failpoints.InjectedFault) as e:
+            self._quarantine(path, e)
             return {}
-        if raw.get("schema") != QUEUE_SCHEMA:
+        if not isinstance(raw, dict) or raw.get("schema") != QUEUE_SCHEMA:
+            got = raw.get("schema") if isinstance(raw, dict) \
+                else type(raw).__name__
+            self._quarantine(path, f"schema {got!r} != {QUEUE_SCHEMA}")
             return {}
         jobs = {}
         for k, v in raw.get("jobs", {}).items():
@@ -211,6 +290,7 @@ class JobQueue:
         path.parent.mkdir(parents=True, exist_ok=True)
         blob = {"schema": QUEUE_SCHEMA,
                 "jobs": {k: j.to_json() for k, j in jobs.items()}}
+        failpoints.fp("queue.replace.before")
         fd, tmp = tempfile.mkstemp(dir=str(path.parent), suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
@@ -357,6 +437,25 @@ class JobQueue:
 
         return self._mutate(fn)
 
+    def expire_stale(self, max_age_s: float) -> int:
+        """Drop PENDING jobs whose demand went quiet: no engine has
+        missed on the shape for ``max_age_s`` seconds (``last_seen`` is
+        maxed on every harvest merge, so live demand keeps refreshing
+        it).  Leased jobs are in flight and ``done``/``failed`` jobs are
+        the ledger — only queued-but-unwanted work is dropped.  Returns
+        the number of jobs removed (each leaves a tombstone warning)."""
+        def fn(jobs: dict) -> int:
+            cutoff = self.clock() - max_age_s
+            victims = [k for k, j in jobs.items()
+                       if j.state == "pending" and j.last_seen < cutoff]
+            for k in victims:
+                log.warning("queue: expiring %s (no miss for > %.0fs)",
+                            k, max_age_s)
+                del jobs[k]
+            return len(victims)
+
+        return self._mutate(fn)
+
     # -- views -----------------------------------------------------------
 
     def jobs(self) -> dict:
@@ -420,13 +519,18 @@ def candidate_tuning_keys(problem, hw=None,
 
 
 def harvest(queue: Optional[JobQueue] = None, *, miss_path=None,
-            top_candidates: int = DEFAULT_TOP_CANDIDATES, hw=None) -> dict:
+            top_candidates: int = DEFAULT_TOP_CANDIDATES, hw=None,
+            expire_after_s: Optional[float] = None) -> dict:
     """Consume the persisted miss log into deduped tuning jobs.
 
     One job per distinct (platform, problem); ``priority`` is the miss
     count so hot misses rank first; the payload is the model-ranked head
     of the grammar candidate space.  Unparseable keys are skipped (a
-    miss log may carry keys written by a newer problem schema)."""
+    miss log may carry keys written by a newer problem schema).
+    ``expire_after_s`` additionally drops pending jobs no engine has
+    missed on within that window (``harvest --expire-after``) — the
+    demand-driven garbage collection pass; this run's fresh misses
+    refresh ``last_seen`` first, so they always survive."""
     from repro.core import registry
     from repro.core.plan import Problem
     from repro.kernels.variants.grammar import GRAMMAR_VERSION
@@ -455,6 +559,8 @@ def harvest(queue: Optional[JobQueue] = None, *, miss_path=None,
     counts = queue.enqueue(jobs)
     counts["harvested"] = len(jobs)
     counts["skipped"] = skipped
+    if expire_after_s is not None:
+        counts["expired"] = queue.expire_stale(expire_after_s)
     log.info("harvest: %d miss records -> %s (queue %s)", len(records),
              counts, queue.path())
     return counts

@@ -23,18 +23,22 @@ One worker process drains the job queue for its own platform:
   model-ranked challenger.
 
 :func:`run_worker` is the process body the ``tune_service work`` CLI
-forks N of.  ``REPRO_TUNE_CRASH=after-claim`` hard-kills the process
-right after its first claim — the fault-injection hook the lease
-requeue test uses to simulate a worker dying mid-job.
+forks N of.  Fault injection rides the §16 failpoint plane: arming
+``worker.claim.after`` / ``worker.build.after`` with a ``crash`` action
+hard-kills the process at that point — what a SIGKILLed or OOMed worker
+looks like, the hook the lease requeue tests use.  The pre-§16 env
+spelling ``REPRO_TUNE_CRASH=after-claim|after-build`` still works as an
+alias (``failpoints.TUNE_CRASH_ALIAS``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import logging
-import os
 import time
 from typing import Optional
+
+from repro.resilience import failpoints
 
 log = logging.getLogger(__name__)
 
@@ -42,13 +46,9 @@ log = logging.getLogger(__name__)
 # build; the evaluator's tournament then early-stops within these
 DEFAULT_BUILD_K = 8
 
-
-def _crash_point(point: str) -> None:
-    """Fault injection for the fleet tests: die the hard way (no atexit,
-    no finally) — exactly what a SIGKILLed or OOMed worker looks like."""
-    if os.environ.get("REPRO_TUNE_CRASH", "") == point:
-        log.warning("REPRO_TUNE_CRASH=%s: simulating worker crash", point)
-        os._exit(17)
+# transient claim failures (lock timeout, injected queue fault) retried
+# with linear backoff before the worker gives up
+CLAIM_RETRIES = 3
 
 
 @dataclasses.dataclass
@@ -237,19 +237,32 @@ def run_worker(queue=None, *, worker_id: Optional[str] = None,
                           warmup=warmup)
     report = WorkReport(worker=worker_id)
     t0 = time.perf_counter()
+    claim_failures = 0
     while max_jobs is None or report.done + report.failed < max_jobs:
-        job = queue.claim(worker_id, lease_s=lease_s, platform=platform)
+        try:
+            job = queue.claim(worker_id, lease_s=lease_s, platform=platform)
+        except Exception as e:  # noqa: BLE001 — lock timeout / queue fault
+            claim_failures += 1
+            if claim_failures > CLAIM_RETRIES:
+                log.warning("worker %s: claim failed %d times (%s); "
+                            "giving up", worker_id, claim_failures, e)
+                break
+            log.warning("worker %s: claim failed (%s); retry %d/%d",
+                        worker_id, e, claim_failures, CLAIM_RETRIES)
+            time.sleep(poll_s * claim_failures)   # linear backoff
+            continue
+        claim_failures = 0
         if job is None:
             if idle_exit:
                 break
             time.sleep(poll_s)
             continue
-        _crash_point("after-claim")
+        failpoints.fp("worker.claim.after")
         log.info("worker %s: claimed %s (priority %d, attempt %d)",
                  worker_id, job.job_id, job.priority, job.attempts)
         try:
             built = builder.build(job)
-            _crash_point("after-build")
+            failpoints.fp("worker.build.after")
             winner = evaluator.evaluate(built)
         except Exception as e:  # noqa: BLE001 — release, let a retry happen
             log.warning("worker %s: job %s failed (%s)", worker_id,

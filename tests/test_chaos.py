@@ -1,0 +1,242 @@
+"""Seeded chaos harness (DESIGN.md §16).
+
+Random fault schedules — failpoint actions, probabilities, fire caps,
+and request deadlines all drawn from a per-seed RNG — run against the
+serving front end on the VirtualClock and against the tuning queue
+under thread contention.  Every schedule replays exactly (seeded
+failpoint RNG + virtual clock), so a failure here is a repro, not a
+flake.
+
+Invariants under ANY schedule:
+
+* serving: no slot leak, every stream reaches exactly one terminal
+  state, and the streams that complete are token-for-token identical
+  to the healthy run — degradation changes SPEED, never results;
+* with failpoints disarmed the engine reports zero degradations;
+* queue: every job is completed exactly once, no matter how many
+  injected write failures and lock delays the workers absorbed.
+"""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.resilience import degrade, failpoints
+
+N_SEEDS = 5
+
+# numerics-neutral fault sites: each models a durability/IO failure
+# whose §16 ladder rung preserves results (site, action)
+SERVING_SITES = (
+    ("registry.load", "raise"),
+    ("registry.load", "corrupt"),
+    ("registry.flush.before_replace", "raise"),
+    ("registry.misses.before_replace", "raise"),
+    ("programs.deserialize", "corrupt"),
+    ("programs.deserialize", "raise"),
+    ("programs.serialize.before_replace", "raise"),
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_failpoints():
+    failpoints.reset()
+    yield
+    failpoints.reset()
+
+
+@pytest.fixture(scope="module")
+def f32_model():
+    from repro.configs import get_reduced_config
+    from repro.models.registry import build_model
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=512, d_ff=1024, num_layers=2, vocab_size=1024,
+        num_heads=8, num_kv_heads=8, head_dim=64, dtype="float32")
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    return model, params, axes
+
+
+@pytest.fixture(scope="module")
+def prog_dir(tmp_path_factory):
+    return tmp_path_factory.mktemp("chaos_programs")
+
+
+def make_afe(f32_model, prog_dir):
+    from repro.serve.clock import VirtualClock
+    from repro.serve.engine import Engine
+    from repro.serve.frontend import AsyncEngine
+    model, params, axes = f32_model
+    eng = Engine(model, params, axes, max_len=256, max_batch=2,
+                 max_prompt=32, prepack=False, program_cache=prog_dir)
+    return eng, AsyncEngine(eng, clock=VirtualClock())
+
+
+def chaos_trace(seed, n=10):
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += float(rng.uniform(0.0005, 0.004))
+        reqs.append(Request(
+            tokens=rng.integers(0, 1024,
+                                size=int(rng.integers(2, 16)))
+            .astype(np.int32),
+            max_new_tokens=int(rng.integers(1, 6)), rid=i,
+            arrival_time=t))
+    return reqs
+
+
+def with_deadlines(reqs, rng):
+    """Random deadlines from a SEPARATE rng, so the request content
+    (prompts, budgets, arrivals) is identical to the healthy trace."""
+    import dataclasses
+    out = []
+    for r in reqs:
+        d = None
+        if rng.random() < 0.3:
+            d = r.arrival_time + float(rng.uniform(0.002, 0.05))
+        out.append(dataclasses.replace(r, deadline=d))
+    return out
+
+
+def chaos_schedule(rng):
+    """Draw one failpoint schedule: a random subset of the neutral
+    sites with random probability and fire caps."""
+    spec = {}
+    for site, action in SERVING_SITES:
+        if rng.random() < 0.6:
+            spec[site] = {"action": action,
+                          "p": float(rng.choice([0.3, 0.7, 1.0])),
+                          "times": int(rng.choice([1, 3, -1]))}
+    return spec
+
+
+def check_terminal(afe, streams, stats):
+    assert not afe.sched.active                       # no slot leak
+    assert sorted(afe.sched.free) == list(range(afe.sched.slots))
+    for s in streams:
+        assert s.done                                 # exactly one terminal
+        assert s.completed + s.rejected + s.cancelled \
+            + (s.result is None and not s.rejected
+               and not s.cancelled) == 1
+    assert stats.generated_tokens == sum(len(s.tokens) for s in streams)
+
+
+@pytest.mark.parametrize("seed", range(N_SEEDS))
+def test_serving_chaos_schedule(f32_model, prog_dir, seed):
+    rng = np.random.default_rng(1000 + seed)
+
+    # healthy baseline: same arrivals, no faults, no deadlines
+    eng_h, afe_h = make_afe(f32_model, prog_dir)
+    healthy, stats_h = afe_h.simulate(chaos_trace(1000 + seed))
+    check_terminal(afe_h, healthy, stats_h)
+    hr = eng_h.health_report()
+    assert hr["healthy"], hr                          # disarmed: zero demotions
+    assert stats_h.cancelled == 0 and stats_h.expired == 0
+    want = {s.rid: list(s.tokens) for s in healthy if s.completed}
+
+    # chaos run: same requests + random deadlines + random fault schedule
+    trace = with_deadlines(chaos_trace(1000 + seed), rng)
+    spec = chaos_schedule(rng)
+    failpoints.configure(spec, seed=seed)
+    eng_c, afe_c = make_afe(f32_model, prog_dir)
+    streams, stats = afe_c.simulate(trace)
+    failpoints.reset()
+
+    check_terminal(afe_c, streams, stats)
+    # token parity: every stream that COMPLETED under chaos matches the
+    # healthy run byte-for-byte — faults degrade speed, not results
+    for s in streams:
+        if s.completed:
+            assert list(s.tokens) == want[s.rid], \
+                f"seed {seed}: stream {s.rid} diverged under {spec}"
+    # deadline accounting ties out
+    assert stats.expired == sum(s.cancelled for s in streams)
+    assert stats.cancelled == stats.expired
+
+
+def test_degradation_never_changes_results_kernel_ladder(f32_model,
+                                                         prog_dir):
+    """Knock out the whole planned rung (every Pallas variant raises at
+    lowering) and serve: tokens must be identical to the healthy run
+    while the engine reports the demotions."""
+    eng_h, afe_h = make_afe(f32_model, prog_dir)
+    healthy, _ = afe_h.simulate(chaos_trace(99))
+    want = {s.rid: list(s.tokens) for s in healthy}
+
+    failpoints.configure({"kernels.lower.skinny": "raise",
+                          "kernels.lower.tall": "raise",
+                          # force retrace so lowering actually re-runs
+                          "programs.deserialize": "raise"})
+    # drop jax's jit/lowering cache too: the healthy engine shares the
+    # module-scoped model object, and a cached lowering would replay
+    # WITHOUT re-running the Python trace (and thus the ladder)
+    jax.clear_caches()
+    eng_c, afe_c = make_afe(f32_model, prog_dir)
+    streams, _ = afe_c.simulate(chaos_trace(99))
+    failpoints.reset()
+    assert {s.rid: list(s.tokens) for s in streams} == want
+    rep = eng_c.health_report()
+    assert not rep["healthy"]
+    assert rep["degradations"]["by_seam"].get("kernel.variant", 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# queue chaos: exactly-once completion under faults + contention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_queue_chaos_exactly_once(tmp_path, seed):
+    from repro.tuning.queue import JobQueue, TuneJob
+
+    rng = np.random.default_rng(seed)
+    n_jobs = 6
+    q = JobQueue(tmp_path / "q.json", lock_timeout_s=30.0)
+    q.enqueue([TuneJob(problem_key=f"p{i}", platform="cpu")
+               for i in range(n_jobs)])
+
+    # injected chaos: occasional write failure (bounded so the run
+    # terminates), lock-acquire delays to widen contention windows
+    failpoints.configure(
+        {"queue.replace.before": {"action": "raise",
+                                  "p": float(rng.choice([0.2, 0.4])),
+                                  "times": int(rng.integers(3, 8))},
+         "queue.lock.acquire": {"action": "delay", "delay_s": 0.002,
+                                "p": 0.5}},
+        seed=seed)
+
+    def worker(wid):
+        while True:
+            try:
+                job = q.claim(wid, lease_s=60.0)
+            except Exception:
+                continue                 # injected fault: retry
+            if job is None:
+                return
+            for _ in range(50):          # complete must eventually land
+                try:
+                    if q.complete(job.job_id, wid, result="ok"):
+                        break
+                except Exception:
+                    continue
+                break                    # lease lost (not possible here)
+
+    threads = [threading.Thread(target=worker, args=(f"w{i}",))
+               for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads)
+    failpoints.reset()
+
+    jobs = q.jobs()
+    assert len(jobs) == n_jobs
+    for j in jobs.values():
+        assert j.state == "done", (j.job_id, j.state, j.history)
+        done_events = [h for h in j.history if h[0] == "done"]
+        assert len(done_events) == 1, j.history   # exactly-once

@@ -1,0 +1,606 @@
+"""Resilience plane (DESIGN.md §16): failpoints, degradation ladder,
+deadlines/cancellation, torn persistence, and the lock-steal fix.
+
+Everything deterministic: failpoint probability draws come from a
+seeded RNG, serving runs on the VirtualClock, and the lock hammer
+asserts mutual exclusion exactly.
+"""
+
+import asyncio
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.resilience import degrade, failpoints
+from repro.resilience.failpoints import InjectedFault
+
+
+@pytest.fixture(autouse=True)
+def _clean_failpoints():
+    failpoints.reset()
+    yield
+    failpoints.reset()
+
+
+# ---------------------------------------------------------------------------
+# failpoint registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_unarmed_is_noop():
+    failpoints.fp("nothing.armed")
+    assert failpoints.corrupt("nothing.armed", b"data") == b"data"
+    assert failpoints.report() == {}
+
+
+def test_raise_action_and_times_cap():
+    failpoints.configure({"a.b": {"action": "raise", "times": 2}})
+    fired = 0
+    for _ in range(5):
+        try:
+            failpoints.fp("a.b")
+        except InjectedFault:
+            fired += 1
+    assert fired == 2
+    rep = failpoints.report()["a.b"]
+    assert rep["fired"] == 2 and rep["hits"] == 5
+
+
+def test_probability_is_seeded():
+    def run(seed):
+        failpoints.reset()
+        failpoints.configure({"p.site": {"action": "raise", "p": 0.5}},
+                             seed=seed)
+        out = []
+        for _ in range(64):
+            try:
+                failpoints.fp("p.site")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    a, b, c = run(7), run(7), run(8)
+    assert a == b                        # same seed -> same schedule
+    assert a != c                        # different seed -> different draw
+    assert 10 < sum(a) < 54              # actually probabilistic
+
+
+def test_compact_spec_and_json_spec():
+    failpoints.configure("x=raise:times=1;y=delay:delay_s=0.25:p=0.5")
+    rep = failpoints.report()
+    assert rep["x"] == {"action": "raise", "p": 1.0, "times": 1,
+                        "hits": 0, "fired": 0}
+    assert rep["y"]["action"] == "delay" and rep["y"]["p"] == 0.5
+    failpoints.reset()
+    failpoints.configure('{"z": {"action": "corrupt", "times": 3}}')
+    assert failpoints.report()["z"]["times"] == 3
+
+
+def test_unknown_action_rejected():
+    with pytest.raises(ValueError, match="unknown failpoint action"):
+        failpoints.configure({"s": "explode"})
+    with pytest.raises(ValueError, match="unknown keys"):
+        failpoints.configure({"s": {"action": "raise", "bogus": 1}})
+
+
+def test_delay_charges_virtual_clock():
+    from repro.serve.clock import VirtualClock
+    clock = VirtualClock()
+    failpoints.configure({"d": {"action": "delay", "delay_s": 0.5}})
+    t0 = clock.now()
+    failpoints.fp("d", clock=clock)
+    assert clock.now() - t0 == pytest.approx(0.5)
+
+
+def test_corrupt_tears_bytes_and_str():
+    failpoints.configure({"c": "corrupt"})
+    b = failpoints.corrupt("c", b"0123456789")
+    s = failpoints.corrupt("c", "0123456789")
+    assert b != b"0123456789" and b.startswith(b"01234")
+    assert s != "0123456789" and s.startswith("01234")
+    # a corrupt action on a control-flow site degenerates to raise
+    with pytest.raises(InjectedFault):
+        failpoints.fp("c")
+
+
+def test_env_arming_and_tune_crash_alias(monkeypatch):
+    monkeypatch.setenv(failpoints.ENV_CONFIG, "e.site=raise:times=2")
+    monkeypatch.setenv(failpoints.ENV_TUNE_CRASH, "after-claim")
+    failpoints.reset()
+    rep = failpoints.report()
+    assert rep["e.site"]["times"] == 2
+    # the pre-§16 worker hook aliases onto the plane as a crash action
+    assert rep["worker.claim.after"]["action"] == "crash"
+    monkeypatch.setenv(failpoints.ENV_TUNE_CRASH, "after-everything")
+    failpoints.reset()
+    assert "worker.claim.after" not in failpoints.report()  # unknown: warn
+
+
+def test_bad_env_config_never_raises(monkeypatch):
+    monkeypatch.setenv(failpoints.ENV_CONFIG, "{not json at all")
+    failpoints.reset()
+    failpoints.fp("anything")            # must not raise
+    assert failpoints.report() == {}
+
+
+# ---------------------------------------------------------------------------
+# degradation bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_circuit_breaker_opens_and_resets():
+    br = degrade.CircuitBreaker(threshold=3)
+    assert br.allow("k")
+    assert not br.failure("k") and not br.failure("k")
+    br.success("k")                      # clean pass resets the count
+    assert not br.failure("k") and not br.failure("k")
+    assert br.failure("k")               # third consecutive: opens
+    assert not br.allow("k")
+    assert br.allow("other")
+    assert br.report()["open"] == ["k"]
+
+
+def test_degrade_stats_contextvar_routing():
+    mine = degrade.DegradeStats()
+    with degrade.use(mine):
+        degrade.record("seam.a", key="k1", fallback="fb")
+        degrade.record("seam.a")
+    degrade.record("seam.b")             # outside: goes to GLOBAL
+    assert mine.counts == {"seam.a": 2}
+    rep = mine.report()
+    assert rep["total"] == 2 and rep["events"][0]["fallback"] == "fb"
+    assert degrade.GLOBAL.counts.get("seam.b", 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# torn persistence: every durability seam degrades, never raises
+# ---------------------------------------------------------------------------
+
+
+def test_registry_load_survives_torn_file(tmp_path):
+    from repro.core import registry
+    p = tmp_path / "plans.json"
+    p.write_text('{"plans": {"x": {"truncated...')
+    assert registry._read_json(p) is None  # warn, not raise
+
+
+def test_queue_load_quarantines_torn_file(tmp_path):
+    from repro.tuning.queue import QUEUE_SCHEMA, JobQueue, TuneJob
+    qp = tmp_path / "queue.json"
+    qp.write_text('{"schema": 1, "jobs": {"a/b": {"problem_')
+    q = JobQueue(qp)
+    stats = degrade.DegradeStats()
+    with degrade.use(stats):
+        assert q.jobs() == {}            # torn file -> empty, no raise
+    assert stats.counts.get("queue.file") == 1
+    assert (tmp_path / "queue.json.corrupt").exists()  # forensics kept
+    # the queue restarts cleanly after quarantine
+    q.enqueue([TuneJob(problem_key="m4096_k4096_n16_bfloat16_s1",
+                       platform="cpu")])
+    assert q.status()["pending"] == 1
+    # wrong schema is quarantined too (incl. valid-JSON-non-dict)
+    qp.write_text(json.dumps([1, 2, 3]))
+    assert q.jobs() == {}
+
+
+def test_program_cache_survives_zero_byte_entry(tmp_path):
+    from repro.serve.programs import ProgramStore
+
+    store = ProgramStore.__new__(ProgramStore)  # _load only needs cache_dir
+    store.cache_dir = tmp_path
+    (tmp_path / "deadbeef.prog").write_bytes(b"")
+    stats = degrade.DegradeStats()
+    with degrade.use(stats):
+        assert store._load("deadbeef") is None  # warn + retrace, no raise
+    assert stats.counts.get("program.disk") == 1
+
+
+def test_find_db_survives_torn_file(tmp_path, monkeypatch):
+    from repro.tuning import find_db
+    p = tmp_path / "find.json"
+    p.write_text('{"schema": "find_db/1", "plans": {"trunc')
+    stats = degrade.DegradeStats()
+    with degrade.use(stats):
+        assert find_db.read_find_db(p, strict=False) == {}
+    assert stats.counts.get("registry.find_db") == 1
+    with pytest.raises(Exception):
+        find_db.read_find_db(p, strict=True)
+
+
+def test_registry_flush_defers_on_write_failure(tmp_path):
+    from repro.core.autotuner import make_plan
+    from repro.core.plan import Problem
+    from repro.core.registry import Registry
+    reg = Registry(plan_path=tmp_path / "plans.json",
+                   measure_path=tmp_path / "measure.json")
+    plan = make_plan(Problem(4096, 4096, 16), persist=False)
+    failpoints.configure(
+        {"registry.flush.before_replace": {"action": "raise"}})
+    stats = degrade.DegradeStats()
+    with degrade.use(stats):
+        reg.put(plan, persist=True)      # write fails -> deferred, no raise
+    assert stats.counts.get("registry.flush", 0) >= 1
+    # memory stays authoritative
+    assert reg.get(plan.problem.key()) is not None
+    failpoints.reset()
+    with degrade.use(stats):
+        reg.flush()                      # disarmed: the deferred write lands
+    assert (tmp_path / "plans.json").exists()
+
+
+def test_miss_log_restashes_on_write_failure(tmp_path):
+    from repro.core.registry import Registry
+    reg = Registry(plan_path=tmp_path / "plans.json",
+                   measure_path=tmp_path / "measure.json")
+    miss = tmp_path / "misses.json"
+    assert reg.get("m4096_k4096_n16_bfloat16_s1") is None  # records a miss
+    failpoints.configure(
+        {"registry.misses.before_replace": {"action": "raise"}})
+    stats = degrade.DegradeStats()
+    with degrade.use(stats):
+        assert reg.flush_misses(miss) == 0  # failed write -> re-stashed
+    assert stats.counts.get("registry.misses") == 1
+    assert not miss.exists()
+    failpoints.reset()
+    assert reg.flush_misses(miss) == 1   # nothing was lost
+    assert miss.exists()
+
+
+# ---------------------------------------------------------------------------
+# file-lock steal race (two breakers must not both win)
+# ---------------------------------------------------------------------------
+
+
+def test_stale_break_is_exclusive(tmp_path):
+    from repro.tuning.queue import _FileLock
+    lock_dir = tmp_path / "q.lock"
+    lock_dir.mkdir()
+    old = time.time() - 3600
+    os.utime(lock_dir, (old, old))       # a crashed holder's stale lock
+    a = _FileLock(lock_dir, timeout_s=1.0, stale_s=30.0)
+    b = _FileLock(lock_dir, timeout_s=0.2, stale_s=30.0)
+    a.__enter__()                        # breaks the stale lock, acquires
+    assert (lock_dir / "owner").read_text() == a.token
+    with pytest.raises(TimeoutError):
+        b.__enter__()                    # a's FRESH lock must NOT be stolen
+    a.__exit__(None, None, None)
+    with b:                              # now free
+        assert (lock_dir / "owner").read_text() == b.token
+    assert not lock_dir.exists()
+
+
+def test_exit_does_not_remove_foreign_lock(tmp_path):
+    from repro.tuning.queue import _FileLock
+    lock_dir = tmp_path / "q.lock"
+    a = _FileLock(lock_dir, timeout_s=1.0)
+    b = _FileLock(lock_dir, timeout_s=1.0)
+    with a:
+        b.__exit__(None, None, None)     # not the owner: must be a no-op
+        assert lock_dir.exists()
+        assert (lock_dir / "owner").read_text() == a.token
+    assert not lock_dir.exists()
+
+
+_HAMMER = r"""
+import sys, time
+from repro.tuning.queue import _FileLock
+lock_path, counter, n = sys.argv[1], sys.argv[2], int(sys.argv[3])
+from pathlib import Path
+for _ in range(n):
+    with _FileLock(Path(lock_path), timeout_s=30.0, stale_s=0.4):
+        v = int(Path(counter).read_text())
+        time.sleep(0.002)                 # widen the race window
+        Path(counter).write_text(str(v + 1))
+print("ok")
+"""
+
+
+def test_two_process_lock_hammer_with_stale_breaks(tmp_path):
+    """Regression for the double-break race: two processes increment a
+    read-modify-write counter under the lock while the stale threshold
+    (0.4s) is short enough that breaks genuinely happen against slow
+    holders.  Any lost increment = two processes inside the critical
+    section at once."""
+    lock_dir = tmp_path / "c.lock"
+    counter = tmp_path / "counter"
+    counter.write_text("0")
+    lock_dir.mkdir()                     # pre-existing stale lock
+    old = time.time() - 3600
+    os.utime(lock_dir, (old, old))
+    n = 25
+    env = dict(os.environ, PYTHONPATH="src")
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _HAMMER, str(lock_dir), str(counter), str(n)],
+        env=env, cwd=str(Path(__file__).resolve().parent.parent),
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE) for _ in range(2)]
+    outs = [p.communicate(timeout=120) for p in procs]
+    assert all(p.returncode == 0 for p in procs), outs
+    assert int(counter.read_text()) == 2 * n
+
+
+# ---------------------------------------------------------------------------
+# worker claim retry + harvest expiry
+# ---------------------------------------------------------------------------
+
+
+class _FlakyQueue:
+    def __init__(self, failures):
+        self.failures = failures
+        self.claims = 0
+
+    def claim(self, *a, **k):
+        self.claims += 1
+        if self.failures > 0:
+            self.failures -= 1
+            raise TimeoutError("injected lock timeout")
+        return None                      # queue dry
+
+
+def test_worker_retries_transient_claim_failures():
+    from repro.tuning.worker import run_worker
+    q = _FlakyQueue(failures=2)
+    report = run_worker(q, worker_id="w", poll_s=0.0)
+    assert q.claims == 3                 # 2 failures + 1 clean dry claim
+    assert report.done == 0 and report.failed == 0
+
+
+def test_worker_gives_up_after_retry_budget():
+    from repro.tuning.worker import CLAIM_RETRIES, run_worker
+    q = _FlakyQueue(failures=99)
+    report = run_worker(q, worker_id="w", poll_s=0.0)
+    assert q.claims == CLAIM_RETRIES + 1
+    assert report.done == 0 and report.failed == 0
+
+
+def test_expire_stale_drops_only_quiet_pending(tmp_path):
+    from repro.tuning.queue import JobQueue, TuneJob
+    now = [1000.0]
+    q = JobQueue(tmp_path / "q.json", clock=lambda: now[0])
+    q.enqueue([
+        TuneJob(problem_key="m4096_k4096_n16_bfloat16_s1", platform="cpu",
+                last_seen=100.0),
+        TuneJob(problem_key="m4096_k4096_n32_bfloat16_s1", platform="cpu",
+                last_seen=990.0),
+    ])
+    leased = q.claim("w", lease_s=60.0)  # leased jobs are never expired
+    assert leased is not None
+    assert q.expire_stale(max_age_s=500.0) == (
+        1 if leased.problem_key.endswith("n32_bfloat16_s1") else 0)
+    states = {j.problem_key: j.state for j in q.jobs().values()}
+    assert any(s == "leased" for s in states.values())
+
+
+def test_harvest_expire_after(tmp_path):
+    from repro.tuning.queue import JobQueue, TuneJob, harvest
+    now = [5000.0]
+    q = JobQueue(tmp_path / "q.json", clock=lambda: now[0])
+    # a stale pending job from an old harvest: no engine misses on it
+    q.enqueue([TuneJob(problem_key="m8192_k4096_n16_bfloat16_s1",
+                       platform="cpu", last_seen=10.0)])
+    # fresh miss log for a different problem
+    miss = tmp_path / "misses.json"
+    miss.write_text(json.dumps({
+        "cpu/m4096_k4096_n16_bfloat16_s1": {"count": 3,
+                                            "last_seen": 4999.0}}))
+    counts = harvest(q, miss_path=miss, top_candidates=2,
+                     expire_after_s=600.0)
+    assert counts["harvested"] == 1 and counts["expired"] == 1
+    keys = {j.problem_key for j in q.jobs().values()}
+    assert keys == {"m4096_k4096_n16_bfloat16_s1"}  # fresh survives
+
+
+# ---------------------------------------------------------------------------
+# kernel degradation ladder (numerics preserved at every rung)
+# ---------------------------------------------------------------------------
+
+
+def _tsmm_operands(m=2048, k=512, n=16, seed=0):
+    # shapes must satisfy is_tsmm (skinny<=256, tall>=8*skinny, k>=512)
+    # or tsmm_dot skips planning and the ladder never runs
+    rng = np.random.default_rng(seed)
+    a = jax.numpy.asarray(rng.standard_normal((m, k)), jax.numpy.float32)
+    b = jax.numpy.asarray(rng.standard_normal((k, n)), jax.numpy.float32)
+    return a, b
+
+
+def test_ladder_rung2_xla_twin_matches_planned():
+    from repro.core.tsmm import tsmm_dot
+    a, b = _tsmm_operands()
+    healthy = np.asarray(tsmm_dot(a, b))
+    failpoints.configure({"kernels.lower.skinny": "raise",
+                          "kernels.lower.tall": "raise"})
+    stats = degrade.DegradeStats()
+    with degrade.use(stats):
+        degraded = np.asarray(tsmm_dot(a, b))
+    assert stats.counts.get("kernel.variant", 0) >= 1
+    np.testing.assert_array_equal(healthy, degraded)
+
+
+def test_ladder_rung3_gemm_matches_planned():
+    from repro.core.tsmm import tsmm_dot
+    a, b = _tsmm_operands(seed=1)
+    healthy = np.asarray(tsmm_dot(a, b))
+    failpoints.configure({"kernels.lower.skinny": "raise",
+                          "kernels.lower.tall": "raise",
+                          "kernels.xla.skinny": "raise",
+                          "kernels.xla.tall": "raise"})
+    stats = degrade.DegradeStats()
+    with degrade.use(stats):
+        degraded = np.asarray(tsmm_dot(a, b))
+    assert stats.counts.get("kernel.xla", 0) >= 1
+    np.testing.assert_array_equal(healthy, degraded)
+
+
+def test_breaker_pins_fallback_after_k_failures():
+    from repro.core.tsmm import tsmm_dot
+    a, b = _tsmm_operands(seed=2)
+    failpoints.configure({"kernels.lower.skinny": "raise",
+                          "kernels.lower.tall": "raise"})
+    stats = degrade.DegradeStats(breaker_threshold=2)
+    with degrade.use(stats):
+        for _ in range(4):
+            tsmm_dot(a, b)
+    # first 2 calls fail the planned rung; after that the breaker is
+    # open and the fallback is pinned without re-attempting
+    assert stats.counts.get("kernel.variant") == 2
+    assert stats.counts.get("kernel.pinned", 0) >= 2
+    assert stats.breaker.report()["open"]
+
+
+# ---------------------------------------------------------------------------
+# request deadlines, cancellation, retry (serving level)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def f32_model():
+    from repro.configs import get_reduced_config
+    from repro.models.registry import build_model
+    cfg = get_reduced_config("qwen1_5_4b").reduced(
+        d_model=512, d_ff=1024, num_layers=2, vocab_size=1024,
+        num_heads=8, num_kv_heads=8, head_dim=64, dtype="float32")
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0))
+    return model, params, axes
+
+
+def make_afe(f32_model, **kw):
+    from repro.serve.clock import VirtualClock
+    from repro.serve.engine import Engine
+    from repro.serve.frontend import AsyncEngine
+    model, params, axes = f32_model
+    eng = Engine(model, params, axes, max_len=256, max_batch=2,
+                 max_prompt=32, prepack=False)
+    return eng, AsyncEngine(eng, clock=VirtualClock(), **kw)
+
+
+def _req(rid, n=6, steps=4, arrival=0.0, deadline=None, seed=0):
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed + (rid if isinstance(rid, int) else 0))
+    return Request(tokens=rng.integers(0, 1024, size=n).astype(np.int32),
+                   max_new_tokens=steps, rid=rid, arrival_time=arrival,
+                   deadline=deadline)
+
+
+def test_deadline_none_is_byte_identical(f32_model):
+    """The no-deadline contract: a trace without deadlines serves
+    exactly as before §16 (same tokens, same telemetry counts)."""
+    _, afe1 = make_afe(f32_model)
+    trace = [_req(i, arrival=i * 0.001) for i in range(6)]
+    s1, st1 = afe1.simulate(trace)
+    _, afe2 = make_afe(f32_model)
+    s2, st2 = afe2.simulate([_req(i, arrival=i * 0.001) for i in range(6)])
+    assert [s.tokens for s in s1] == [s.tokens for s in s2]
+    assert st1.cancelled == 0 and st1.expired == 0
+    assert st1.admitted == st2.admitted == 6
+
+
+def test_deadline_expires_queued_request(f32_model):
+    _, afe = make_afe(f32_model)
+    # 2 slots; three long requests occupy the engine, the fourth has a
+    # deadline that lapses while it waits in queue
+    trace = [_req(i, steps=10, arrival=0.0) for i in range(3)]
+    trace.append(_req("doomed", steps=4, arrival=0.0, deadline=1e-6))
+    streams, stats = afe.simulate(trace)
+    doomed = next(s for s in streams if s.rid == "doomed")
+    assert doomed.cancelled and doomed.done and not doomed.completed
+    assert doomed.tokens == []
+    assert stats.expired == 1 and stats.cancelled == 1
+    # everyone else finished; no slot leak
+    assert stats.completed == 3
+    assert sorted(afe.sched.free) == list(range(afe.sched.slots))
+
+
+def test_deadline_reclaims_running_slot_mid_decode(f32_model):
+    from repro.serve.clock import StepCost
+    cost = StepCost()
+    _, afe = make_afe(f32_model)
+    # deadline ~3 decode steps after t=0: the stream is cancelled
+    # MID-decode with partial tokens, freeing its slot for the queued one
+    deadline = cost.prefill_s(8) + 3.5 * cost.decode_step_s
+    trace = [_req(0, steps=50, arrival=0.0, deadline=deadline),
+             _req(1, steps=50, arrival=0.0, deadline=deadline),
+             _req(2, steps=3, arrival=0.0)]      # waits for a freed slot
+    streams, stats = afe.simulate(trace)
+    s0, s1, s2 = streams
+    assert s0.cancelled and s1.cancelled
+    assert 0 < len(s0.tokens) < 50               # partial stream delivered
+    assert s0.result is not None and not s0.result.completed
+    assert s2.completed and len(s2.tokens) == 3  # admitted into freed slot
+    assert stats.expired == 2 and stats.cancelled == 2
+    assert sorted(afe.sched.free) == list(range(afe.sched.slots))
+
+
+def test_cooperative_cancel_via_asyncio(f32_model):
+    _, afe = make_afe(f32_model)
+
+    async def scenario():
+        s_long = await afe.submit(_req(0, steps=50))
+        s_short = await afe.submit(_req(1, steps=3))
+        got = 0
+        async for _ in s_long:
+            got += 1
+            if got == 2:
+                s_long.cancel()          # cooperative: next tick reaps it
+        afe.request_stop()
+        return s_long, s_short, got
+
+    async def main():
+        task = asyncio.ensure_future(scenario())
+        await afe.run()
+        return await task
+
+    s_long, s_short, got = asyncio.run(main())
+    assert s_long.cancelled and not s_long.completed
+    assert got < 50
+    assert s_short.completed and len(s_short.tokens) == 3
+    assert afe.stats.cancelled == 1 and afe.stats.expired == 0
+
+
+def test_submit_retry_recovers_from_transient_faults(f32_model):
+    _, afe = make_afe(f32_model)
+    failpoints.configure(
+        {"frontend.admit": {"action": "raise", "times": 2}})
+
+    async def main():
+        # run() re-arms _running at entry, so stop AFTER draining the
+        # stream — a request_stop() issued before run() would be lost
+        run = asyncio.ensure_future(afe.run())
+        stream = await afe.submit_retry(_req(0, steps=2), retries=3,
+                                        backoff_s=0.01)
+        toks = [t async for t in stream]
+        afe.request_stop()
+        await run
+        return stream, toks
+
+    stream, toks = asyncio.run(main())
+    assert stream.completed and len(toks) == 2
+
+
+def test_submit_retry_exhausts_and_raises(f32_model):
+    _, afe = make_afe(f32_model)
+    failpoints.configure({"frontend.admit": "raise"})
+
+    async def main():
+        with pytest.raises(Exception, match="transient admission"):
+            await afe.submit_retry(_req(0), retries=2, backoff_s=0.001)
+
+    asyncio.run(main())
+
+
+def test_health_report_zero_on_happy_path(f32_model):
+    eng, afe = make_afe(f32_model)
+    streams, stats = afe.simulate([_req(i, arrival=i * 0.001)
+                                   for i in range(4)])
+    hr = eng.health_report()
+    assert hr["healthy"], hr
+    assert hr["degradations"]["total"] == 0
+    assert all(s.completed for s in streams)
